@@ -1,0 +1,33 @@
+"""Paper Fig. 10: PDP vs MRED trade-off scatter data."""
+from __future__ import annotations
+
+import time
+
+from repro.core import energy, metrics
+from repro.core import multiplier as m
+
+
+def run() -> list:
+    rows = []
+    print("\n== Fig 10: PDP (fJ) vs MRED (%) trade-off ==")
+    print(f"{'design':>22s} {'PDP':>8s} {'MRED%':>7s}")
+    pts = []
+    for name in energy.PAPER_TABLE5:
+        if name == "exact":
+            continue
+        t0 = time.perf_counter()
+        pdp = energy.estimate(name)["pdp"]
+        mred = metrics.evaluate(m.ALL_MULTIPLIERS[name], name).mred * 100
+        us = (time.perf_counter() - t0) * 1e6
+        pts.append((name, pdp, mred))
+        print(f"{name:>22s} {pdp:8.1f} {mred:7.2f}")
+        rows.append((f"fig10/{name}", us, f"pdp={pdp:.1f};mred={mred:.2f}"))
+    best = min(pts, key=lambda x: x[1] + x[2] * 5)
+    prop = next(p for p in pts if p[0] == "proposed")
+    pareto = [p for p in pts
+              if not any(q[1] < p[1] and q[2] < p[2] for q in pts)]
+    on_pareto = any(p[0] == "proposed" for p in pareto)
+    print(f"proposed on Pareto front: {on_pareto} "
+          f"(paper: lowest PDP and lowest MRED)")
+    rows.append(("fig10/pareto", 0.0, f"proposed_on_front={on_pareto}"))
+    return rows

@@ -1,0 +1,45 @@
+"""Paper Fig. 9: edge-detection PSNR per multiplier design.
+
+The paper reports PSNR on an unspecified image with unspecified
+postprocessing (proposed: 20.13 dB). PSNR is strongly image/harness
+dependent (see EXPERIMENTS.md §Fig9) — we report our harness (pixels>>1,
+clip-[0,255]) on both a geometric test card and a photo-statistics image,
+plus the Pallas-kernel path timing.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.data import photo_like, test_image
+from repro.nn import conv
+
+
+def run() -> list:
+    rows = []
+    designs = ["proposed", "design_du2022", "design_strollo2020",
+               "design_du2024", "design_guo2019", "design_esposito2018",
+               "design_akbari2017", "design_krishna2024"]
+    for img_name, img in (("testcard", test_image(96, 96)),
+                          ("photo", photo_like(128, 128))):
+        ref = np.asarray(conv.edge_detect(img, "exact"))
+        print(f"\n== Fig 9: edge detection PSNR vs exact ({img_name}) ==")
+        for name in designs:
+            t0 = time.perf_counter()
+            out = np.asarray(conv.edge_detect(img, name))
+            us = (time.perf_counter() - t0) * 1e6
+            p = conv.psnr(ref, out)
+            print(f"{name:>22s} PSNR={p:6.2f} dB")
+            rows.append((f"fig9/{img_name}/{name}", us, f"psnr={p:.2f}dB"))
+
+    # Pallas kernel path (interpret mode on CPU)
+    from repro.kernels.laplacian_conv.ops import laplacian_conv
+    img = test_image(96, 96)
+    px = (np.asarray(img, np.int32) >> 1)
+    t0 = time.perf_counter()
+    _ = np.asarray(laplacian_conv(px))
+    us = (time.perf_counter() - t0) * 1e6
+    rows.append(("fig9/pallas_kernel", us, "interpret=True"))
+    print(f"pallas laplacian_conv (interpret): {us:.0f} us")
+    return rows

@@ -1,0 +1,50 @@
+"""Kernel micro-benchmarks (beyond paper): approximate execution modes.
+
+Times the XLA-lowered execution modes of the approximate matmul on CPU
+(Pallas kernels are validated in interpret mode — wall-clock kernel numbers
+only mean something on real TPU; the XLA modes give the CPU-comparable
+throughput picture and the relative cost of bit-exact emulation).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.nn import approx_dot as ad
+
+
+def _time(f, *args, iters=5):
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else \
+        f(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = f(*args)
+        jax.tree_util.tree_leaves(out)[0].block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run() -> list:
+    rows = []
+    rng = np.random.default_rng(0)
+    m, k, n = 256, 512, 256
+    a8 = jnp.asarray(rng.integers(-128, 128, (m, k)), jnp.int8)
+    b8 = jnp.asarray(rng.integers(-128, 128, (k, n)), jnp.int8)
+    print("\n== kernel bench: int8 matmul modes (256x512x256, CPU) ==")
+    macs = m * k * n
+    for mode in ("int8", "approx_stat", "approx_lut", "approx_bitexact"):
+        f = jax.jit(lambda a, b, md=mode: ad.approx_matmul_int8(a, b, mode=md))
+        us = _time(f, a8, b8)
+        gmacs = macs / us / 1e3
+        print(f"{mode:>16s}: {us:10.0f} us  ({gmacs:6.2f} GMAC/s)")
+        rows.append((f"kernel/matmul_{mode}", us, f"gmacs={gmacs:.2f}"))
+
+    from repro.kernels.approx_mul.ops import approx_mul
+    x = jnp.asarray(rng.integers(-128, 128, (512, 512)), jnp.int32)
+    y = jnp.asarray(rng.integers(-128, 128, (512, 512)), jnp.int32)
+    us = _time(approx_mul, x, y)
+    rows.append(("kernel/approx_mul_pallas_interp", us, "512x512"))
+    print(f"pallas approx_mul (interpret): {us:.0f} us")
+    return rows

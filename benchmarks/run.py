@@ -1,0 +1,58 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints a ``name,us_per_call,derived`` CSV at the end (plus human-readable
+tables as it goes). ``python -m benchmarks.run [--only table4]``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks import (
+    fig9_edge,
+    fig10_tradeoff,
+    kernelbench,
+    table2_compressors,
+    table3_compressor4,
+    table4_errors,
+    table5_hardware,
+)
+
+MODULES = {
+    "table2": table2_compressors,
+    "table3": table3_compressor4,
+    "table4": table4_errors,
+    "table5": table5_hardware,
+    "fig9": fig9_edge,
+    "fig10": fig10_tradeoff,
+    "kernel": kernelbench,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, choices=list(MODULES))
+    args = ap.parse_args()
+
+    rows = []
+    failed = False
+    for name, mod in MODULES.items():
+        if args.only and name != args.only:
+            continue
+        try:
+            rows.extend(mod.run())
+        except Exception:  # noqa: BLE001
+            failed = True
+            print(f"[bench {name}] FAILED:\n{traceback.format_exc()}",
+                  file=sys.stderr)
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Paper Table 2: A+B+C+1 compressor truth-table statistics (P_E, E_mean)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compressors as comp
+
+
+def run() -> list:
+    rows = []
+    print("\n== Table 2: sign-focused A+B+C+1 compressors ==")
+    print(f"{'design':>22s} {'P_E':>8s} {'paper':>8s} {'E_mean':>8s} {'paper':>8s}")
+    for name, c in comp.ALL_3INPUT.items():
+        pe, em = c.error_probability(), c.mean_error()
+        ppe, pem = comp.PAPER_TABLE2_STATS.get(name, (0.0, 0.0)) if \
+            name != "exact3" else (0.0, 0.0)
+        print(f"{name:>22s} {pe:8.4f} {ppe:8.4f} {em:+8.4f} {pem:+8.4f}")
+        assert abs(pe - ppe) < 1e-9 and abs(em - pem) < 1e-9, name
+
+        # throughput of the vectorized compressor evaluation
+        idx = jnp.asarray(np.random.default_rng(0).integers(0, 8, 1 << 16))
+        f = jax.jit(c.apply_packed)
+        f(idx).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(20):
+            f(idx).block_until_ready()
+        us = (time.perf_counter() - t0) / 20 * 1e6
+        rows.append((f"table2/{name}", us, f"PE={pe:.4f};Emean={em:+.4f}"))
+    return rows

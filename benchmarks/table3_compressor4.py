@@ -1,0 +1,33 @@
+"""Paper Table 3: proposed A+B+C+D+1 compressor truth table + statistics."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compressors as comp
+
+
+def run() -> list:
+    c = comp.PROPOSED4
+    print("\n== Table 3: proposed A+B+C+D+1 (reconstruction) ==")
+    print("A B C D | exact approx ED   P(combo)")
+    probs = c.input_probs()
+    for idx in range(16):
+        bits = [(idx >> k) & 1 for k in (3, 2, 1, 0)]
+        print(f"{bits[0]} {bits[1]} {bits[2]} {bits[3]} |   {c.exact[idx]}     "
+              f"{c.values[idx]}    {c.errors[idx]:+d}   {probs[idx]:.4f}")
+    pe, em = c.error_probability(), c.mean_error()
+    print(f"P_E = {pe:.4f} (58/256), E_mean = {em:+.4f} (+7/256)")
+    assert abs(pe - 58 / 256) < 1e-12 and abs(em - 7 / 256) < 1e-12
+
+    idx = jnp.asarray(np.random.default_rng(0).integers(0, 16, 1 << 16))
+    f = jax.jit(c.apply_packed)
+    f(idx).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(20):
+        f(idx).block_until_ready()
+    us = (time.perf_counter() - t0) / 20 * 1e6
+    return [("table3/proposed4", us, f"PE={pe:.4f};Emean={em:+.4f}")]

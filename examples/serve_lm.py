@@ -1,0 +1,34 @@
+"""Serve a small LM with batched requests through the serving engine.
+
+Run: PYTHONPATH=src python examples/serve_lm.py
+"""
+import jax
+import numpy as np
+
+from repro.models import registry as reg
+from repro.serving import ServingEngine
+from repro.serving.engine import Request
+
+
+def main():
+    cfg = reg.get_config("minitron-8b", n_layers=2, d_model=128, d_ff=256,
+                         vocab=1024, n_heads=4, n_kv_heads=2, remat=False,
+                         attn_chunk=64, loss_chunk=64)
+    bundle = reg._BUILDERS[cfg.family](cfg)
+    params = bundle.init_params(jax.random.PRNGKey(0))
+    engine = ServingEngine(bundle, params, batch_size=4, max_len=96)
+
+    rng = np.random.default_rng(1)
+    requests = [Request(prompt=list(rng.integers(1, 1024, size=5)),
+                        max_tokens=12, temperature=0.0 if i % 2 else 0.8)
+                for i in range(8)]
+    out = engine.generate(requests)
+    for i, r in enumerate(out):
+        print(f"req{i}  prompt={r.prompt}\n      -> {r.output}")
+    total = sum(len(r.output) for r in out)
+    print(f"\nserved {len(out)} requests, {total} tokens (continuous batching, "
+          "4 slots)")
+
+
+if __name__ == "__main__":
+    main()

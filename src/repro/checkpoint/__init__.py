@@ -1,0 +1,6 @@
+"""Fault-tolerant checkpointing."""
+from repro.checkpoint.ckpt import (  # noqa: F401
+    CheckpointManager,
+    load_checkpoint,
+    save_checkpoint,
+)

@@ -1,0 +1,189 @@
+"""Atomic, elastic, async checkpointing (no external deps).
+
+Design (scaled down from multi-host practice, same invariants):
+
+* **Atomicity** — a checkpoint directory is written under a ``.tmp`` name
+  and ``os.rename``d into place only after every array and the metadata
+  manifest are flushed; a crashed save can never be mistaken for a valid
+  step. Restore always picks the newest *complete* step.
+* **Elasticity** — arrays are saved with their tree paths in a flat npz per
+  step; on restore they are ``jax.device_put`` with whatever sharding the
+  *new* mesh prescribes, so a checkpoint taken on a 16×16 mesh restores
+  onto 2×16×16 (or a single CPU device) unchanged — elastic rescaling.
+* **Async** — ``save_async`` snapshots to host memory synchronously (cheap)
+  and writes in a daemon thread, overlapping I/O with the next train steps;
+  ``wait()`` joins before the next save or shutdown.
+* **Retention** — keeps the newest ``keep`` checkpoints, deleting older
+  ones only after a newer one is complete.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+SEP = "/"
+
+# numpy can't serialize ml_dtypes (bf16 etc.) through npz: bitcast to a
+# same-width integer container and record the true dtype in the manifest.
+_CONTAINER = {1: np.uint8, 2: np.uint16, 4: np.uint32, 8: np.uint64}
+
+
+def _encode(arr: np.ndarray):
+    if arr.dtype.kind in "biufc":  # plain numpy dtypes pass through
+        return arr, None
+    width = arr.dtype.itemsize
+    return arr.view(_CONTAINER[width]), str(arr.dtype)
+
+
+def _decode(arr: np.ndarray, dtype_name):
+    if dtype_name is None:
+        return arr
+    import ml_dtypes  # noqa: F401  (registers bf16 & friends with numpy)
+    return arr.view(np.dtype(dtype_name))
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = SEP.join(
+            str(getattr(e, "key", getattr(e, "idx", e))) for e in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _unflatten_into(template, flat: dict):
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(template)
+    treedef = leaves_with_paths[1]
+    leaves = []
+    for path, leaf in leaves_with_paths[0]:
+        key = SEP.join(
+            str(getattr(e, "key", getattr(e, "idx", e))) for e in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def save_checkpoint(directory: str, step: int, tree, extra: Optional[dict] = None):
+    """Synchronous atomic save of a pytree at a step."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:010d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat = _flatten(tree)
+    encoded, dtypes = {}, {}
+    for k, v in flat.items():
+        arr, dt = _encode(v)
+        encoded[k] = arr
+        if dt is not None:
+            dtypes[k] = dt
+    np.savez(os.path.join(tmp, "arrays.npz"), **encoded)
+    manifest = {"step": step, "n_arrays": len(flat), "dtypes": dtypes,
+                "time": time.time(), "extra": extra or {}}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def list_steps(directory: str) -> list:
+    if not os.path.isdir(directory):
+        return []
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            manifest = os.path.join(directory, name, "manifest.json")
+            if os.path.exists(manifest):  # complete checkpoints only
+                steps.append(int(name.split("_")[1]))
+    return sorted(steps)
+
+
+def load_checkpoint(directory: str, template, step: Optional[int] = None,
+                    shardings=None):
+    """Restore the newest (or given) step into ``template``'s structure.
+
+    shardings: optional matching tree of NamedSharding — arrays are placed
+    with the *current* mesh layout (elastic restore).
+    """
+    steps = list_steps(directory)
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints in {directory}")
+    step = steps[-1] if step is None else step
+    path = os.path.join(directory, f"step_{step:010d}")
+    manifest_all = json.load(open(os.path.join(path, "manifest.json")))
+    dtypes = manifest_all.get("dtypes", {})
+    with np.load(os.path.join(path, "arrays.npz")) as z:
+        flat = {k: _decode(z[k], dtypes.get(k)) for k in z.files}
+    tree = _unflatten_into(template, flat)
+    if shardings is not None:
+        tree = jax.tree_util.tree_map(
+            lambda x, s: jax.device_put(x, s), tree, shardings)
+    else:
+        tree = jax.tree_util.tree_map(jax.device_put, tree)
+    return tree, step, manifest_all.get("extra", {})
+
+
+class CheckpointManager:
+    """Async save + retention + resume discovery."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def save_async(self, step: int, tree, extra: Optional[dict] = None):
+        self.wait()
+        # snapshot to host synchronously: device buffers may be donated
+        host_tree = jax.tree_util.tree_map(np.asarray, tree)
+
+        def work():
+            try:
+                save_checkpoint(self.directory, step, host_tree, extra)
+                self._gc()
+            except BaseException as e:  # noqa: BLE001 — surfaced on wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def save(self, step: int, tree, extra: Optional[dict] = None):
+        self.wait()
+        save_checkpoint(self.directory, step, tree, extra)
+        self._gc()
+
+    def latest_step(self) -> Optional[int]:
+        steps = list_steps(self.directory)
+        return steps[-1] if steps else None
+
+    def restore(self, template, shardings=None, step: Optional[int] = None):
+        return load_checkpoint(self.directory, template, step, shardings)
+
+    def _gc(self):
+        steps = list_steps(self.directory)
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:010d}"),
+                          ignore_errors=True)

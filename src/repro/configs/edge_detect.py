@@ -1,0 +1,19 @@
+"""The paper's own application config: approximate Laplacian edge detection.
+
+Not an LM — selects the conv pipeline + Pallas kernel; registered for
+--arch completeness so the paper's app is a first-class config.
+"""
+from repro.models.common import ModelConfig
+from repro.models.registry import register
+
+CONFIG = register(ModelConfig(
+    name="edge-detect",
+    family="lm",            # placeholder family; launchers special-case it
+    n_layers=1,
+    d_model=64,
+    n_heads=1,
+    n_kv_heads=1,
+    d_ff=64,
+    vocab=256,
+    dot_mode="approx_bitexact",
+))

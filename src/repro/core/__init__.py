@@ -1,0 +1,12 @@
+"""Core library: the paper's approximate signed multiplier, bit-exact in JAX.
+
+Public API:
+  compressors  — sign-focused compressor models (Table 2/3)
+  multiplier   — closed-form + structural approximate BW multipliers
+  metrics      — exhaustive ER/NMED/MRED evaluation (Table 4)
+  lut          — 256×256 product tables (deployment artifact)
+  energy       — unit-gate analytical hardware model (Table 5)
+"""
+from repro.core import compressors, energy, lut, metrics, multiplier  # noqa: F401
+
+__all__ = ["compressors", "multiplier", "metrics", "lut", "energy"]

@@ -1,0 +1,55 @@
+"""Precomputed lookup tables for the approximate multiplier.
+
+A 256×256 int16 table fully characterizes any 8×8 multiplier model. The LUT
+is the deployment artifact for the ``approx_lut`` execution mode (gathers on
+TPU/CPU) and the ground truth for kernel tests. Index convention:
+``lut[a + 128, b + 128] = mult(a, b)`` for signed a, b in [-128, 127].
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jnp.ndarray
+
+
+@functools.lru_cache(maxsize=None)
+def build_lut(mult_name: str) -> np.ndarray:
+    """Build (and cache) the 256×256 product table for a named multiplier.
+
+    Runs under ``ensure_compile_time_eval`` so the table stays concrete even
+    when first requested inside an outer trace (e.g. lowering a model whose
+    dot_mode consults the LUT).
+    """
+    from repro.core import multiplier as m
+
+    fn = m.ALL_MULTIPLIERS[mult_name]
+    with jax.ensure_compile_time_eval():
+        v = jnp.arange(-128, 128, dtype=jnp.int32)
+        a, b = jnp.meshgrid(v, v, indexing="ij")
+        table = fn(a.reshape(-1), b.reshape(-1)).reshape(256, 256)
+    return np.asarray(table, dtype=np.int32)
+
+
+def lut_multiply(a: Array, b: Array, lut: Array) -> Array:
+    """Gather-based approximate product; a, b int arrays in [-128, 127]."""
+    ai = (jnp.asarray(a, jnp.int32) + 128).astype(jnp.int32)
+    bi = (jnp.asarray(b, jnp.int32) + 128).astype(jnp.int32)
+    return jnp.asarray(lut)[ai, bi]
+
+
+def error_lut(mult_name: str) -> np.ndarray:
+    """256×256 table of (approx − exact) — compact error characterization."""
+    v = np.arange(-128, 128, dtype=np.int64)
+    exact = v[:, None] * v[None, :]
+    return (build_lut(mult_name).astype(np.int64) - exact).astype(np.int32)
+
+
+def error_moments(mult_name: str) -> dict:
+    """Mean/std of the error under uniform operands — drives approx_stat mode."""
+    e = error_lut(mult_name).astype(np.float64)
+    return dict(mean=float(e.mean()), std=float(e.std()), max_abs=float(np.abs(e).max()))

@@ -1,0 +1,84 @@
+"""Error metrics for approximate multipliers (paper §5.1, Eq. 7–8).
+
+All metrics are computed *exhaustively* over the full 8-bit signed operand
+space (65 536 pairs) unless a subset is passed. MRED excludes pairs whose
+exact product is zero (relative error undefined there); the exclusion is
+511/65536 pairs and is the standard convention.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jnp.ndarray
+MultFn = Callable[[Array, Array], Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class ErrorReport:
+    name: str
+    er: float        # error rate: P(approx != exact)
+    med: float       # mean |error distance|
+    nmed: float      # MED / max|exact|
+    mred: float      # mean relative error distance (exact != 0)
+    max_ed: int      # max |error distance|
+    mean_err: float  # signed mean error (bias)
+
+    def row(self) -> str:
+        return (
+            f"{self.name:>22s}  ER={self.er * 100:6.2f}%  NMED={self.nmed * 100:6.4f}%  "
+            f"MRED={self.mred * 100:6.2f}%  MED={self.med:8.2f}  bias={self.mean_err:+8.2f}"
+        )
+
+
+def operand_grid(n_bits: int = 8) -> tuple[Array, Array]:
+    """All (a, b) signed pairs as flat arrays."""
+    lo, hi = -(1 << (n_bits - 1)), (1 << (n_bits - 1))
+    v = jnp.arange(lo, hi, dtype=jnp.int32)
+    a, b = jnp.meshgrid(v, v, indexing="ij")
+    return a.reshape(-1), b.reshape(-1)
+
+
+@jax.jit
+def _exact_products(a: Array, b: Array) -> Array:
+    return a * b
+
+
+def evaluate(mult_fn: MultFn, name: str = "", n_bits: int = 8) -> ErrorReport:
+    """Exhaustive ER / MED / NMED / MRED for an 8×8 multiplier model."""
+    a, b = operand_grid(n_bits)
+    exact = np.asarray(_exact_products(a, b), dtype=np.int64)
+    approx = np.asarray(jax.jit(mult_fn)(a, b), dtype=np.int64)
+    err = approx - exact
+    abs_err = np.abs(err)
+    nz = exact != 0
+    max_exact = np.abs(exact).max()
+    return ErrorReport(
+        name=name or getattr(mult_fn, "__name__", "multiplier"),
+        er=float((err != 0).mean()),
+        med=float(abs_err.mean()),
+        nmed=float(abs_err.mean() / max_exact),
+        mred=float((abs_err[nz] / np.abs(exact[nz])).mean()),
+        max_ed=int(abs_err.max()),
+        mean_err=float(err.mean()),
+    )
+
+
+def evaluate_all(mult_fns: Dict[str, MultFn], n_bits: int = 8) -> Dict[str, ErrorReport]:
+    return {name: evaluate(fn, name, n_bits) for name, fn in mult_fns.items()}
+
+
+# Paper Table 4 values (percent), for validation bands in tests/benchmarks.
+PAPER_TABLE4 = {
+    "design_strollo2020": dict(er=98.47, nmed=1.128, mred=32.80),
+    "design_guo2019": dict(er=98.95, nmed=0.829, mred=30.00),
+    "design_esposito2018": dict(er=99.42, nmed=0.786, mred=35.25),
+    "design_akbari2017": dict(er=97.37, nmed=0.738, mred=29.02),
+    "design_krishna2024": dict(er=98.95, nmed=0.542, mred=33.00),
+    "design_du2022": dict(er=98.15, nmed=0.731, mred=26.84),
+    "proposed": dict(er=98.04, nmed=0.682, mred=26.29),
+}

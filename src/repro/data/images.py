@@ -1,0 +1,31 @@
+"""Procedural test images for the edge-detection application (no network,
+no binary assets — images are generated, deterministic, and license-free)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def test_image(h: int = 96, w: int = 96) -> np.ndarray:
+    """Geometric test card: gradient + rectangle + disk (strong edges)."""
+    yy, xx = np.mgrid[0:h, 0:w]
+    img = (xx * 255 / w).astype(np.float64)
+    img[h // 4:h // 2, w // 4:w // 2] = 220
+    img[(yy - 3 * h // 4) ** 2 + (xx - 3 * w // 4) ** 2 < (h // 6) ** 2] = 30
+    return img.astype(np.uint8)
+
+
+def photo_like(h: int = 128, w: int = 128, seed: int = 3) -> np.ndarray:
+    """Natural-statistics image: low-frequency background + objects + texture."""
+    r = np.random.default_rng(seed)
+    yy, xx = np.mgrid[0:h, 0:w].astype(np.float64)
+    img = np.zeros((h, w))
+    for _ in range(6):
+        fy, fx = r.uniform(0.5, 3, 2)
+        ph = r.uniform(0, 2 * np.pi, 2)
+        img += r.uniform(20, 60) * np.cos(2 * np.pi * fy * yy / h + ph[0]) \
+            * np.cos(2 * np.pi * fx * xx / w + ph[1])
+    img += 128
+    img[h // 5:h // 2, w // 6:w // 3] += 60
+    img[(yy - 2 * h // 3) ** 2 + (xx - 2 * w // 3) ** 2 < (h // 5) ** 2] -= 70
+    img += r.normal(0, 6, (h, w))
+    return np.clip(img, 0, 255).astype(np.uint8)

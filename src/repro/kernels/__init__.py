@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+Each kernel ships as kernel.py (pl.pallas_call + BlockSpec tiling),
+ops.py (jit'd public wrapper, padding, interpret fallback off-TPU) and
+ref.py (pure-jnp oracle used by the allclose test sweeps).
+"""

@@ -1,0 +1,45 @@
+"""Jit'd public wrapper for the approximate matmul kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.approx_matmul.kernel import approx_matmul_pallas
+
+_INTERPRET = jax.default_backend() != "tpu"
+
+_F00 = 192  # f(0,0) of the proposed multiplier (compensation constant)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k"))
+def approx_matmul(a, b, block_m: int = 128, block_n: int = 128, block_k: int = 128):
+    """(M,K) @ (K,N) under the proposed approximate multiplier.
+
+    Pads every dim to its block multiple. Zero-padding the contraction dim
+    injects f(0,0)=192 per padded k element (the compensation constant fires
+    on zero operands — faithful to the netlist), which is subtracted back.
+    """
+    a = jnp.asarray(a, jnp.int32)
+    b = jnp.asarray(b, jnp.int32)
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    bm = min(block_m, _ceil_to(m, 8))
+    bn = min(block_n, _ceil_to(n, 128))
+    bk = min(block_k, _ceil_to(k, 8))
+    pm, pn, pk = (-m) % bm, (-n) % bn, (-k) % bk
+    ap = jnp.pad(a, ((0, pm), (0, pk)))
+    bp = jnp.pad(b, ((0, pk), (0, pn)))
+    out = approx_matmul_pallas(
+        ap, bp, block_m=bm, block_n=bn, block_k=bk, interpret=_INTERPRET
+    )
+    out = out[:m, :n]
+    if pk:
+        out = out - _F00 * pk
+    return out
+
+
+def _ceil_to(x: int, mult: int) -> int:
+    return max(mult, ((x + mult - 1) // mult) * mult) if x > 0 else mult

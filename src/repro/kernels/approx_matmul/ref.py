@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the approximate matmul kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import multiplier as mult
+
+
+def approx_matmul_ref(a, b):
+    """sum_k f(a[m,k], b[k,n]) with f = proposed approximate multiplier.
+
+    Materializes the (M, K, N) product tensor — oracle for small shapes only.
+    """
+    a = jnp.asarray(a, jnp.int32)
+    b = jnp.asarray(b, jnp.int32)
+    prod = mult.approx_multiply(a[:, :, None], b[None, :, :])
+    return prod.sum(axis=1).astype(jnp.int32)

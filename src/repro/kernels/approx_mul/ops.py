@@ -1,0 +1,34 @@
+"""Jit'd public wrapper for the elementwise approximate-multiply kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.approx_mul.kernel import approx_mul_pallas
+
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n"))
+def approx_mul(a, b, block_m: int = 256, block_n: int = 128):
+    """Elementwise approximate product of two equal-shape int arrays.
+
+    Accepts any shape; internally flattens to 2-D, pads to block multiples
+    (padding contributions are sliced away), and dispatches the Pallas kernel.
+    """
+    a = jnp.asarray(a, jnp.int32)
+    b = jnp.asarray(b, jnp.int32)
+    shape = a.shape
+    flat = a.reshape(-1)
+    n_el = flat.shape[0]
+    bn = block_n
+    rows = -(-n_el // bn)
+    bm = min(block_m, max(1, rows))
+    pad_rows = (-rows) % bm
+    total = (rows + pad_rows) * bn
+    a2 = jnp.pad(flat, (0, total - n_el)).reshape(rows + pad_rows, bn)
+    b2 = jnp.pad(b.reshape(-1), (0, total - n_el)).reshape(rows + pad_rows, bn)
+    out = approx_mul_pallas(a2, b2, block_m=bm, block_n=bn, interpret=_INTERPRET)
+    return out.reshape(-1)[:n_el].reshape(shape)

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the elementwise approximate-multiply kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import multiplier as mult
+
+
+def approx_mul_ref(a, b):
+    """Elementwise proposed approximate product (core-library model)."""
+    return mult.approx_multiply(jnp.asarray(a, jnp.int32), jnp.asarray(b, jnp.int32))

@@ -1,0 +1,50 @@
+"""Kernel-friendly closed form of the proposed approximate multiplier.
+
+The core-library model (`repro.core.multiplier`) expands all 28 truncated
+partial products. For the Pallas kernels we use an algebraically identical
+but much cheaper form (≈25 VPU integer ops per element):
+
+* truncation via the 7-term identity
+    trunc(a,b) = Σ_{i=0}^{6} a_i · 2^i · (b & (2^{7-i} − 1))
+  (each column sum collapses into a masked value of b);
+* the single approximate compressor's error (e_C1a) as arithmetic on four
+  partial-product bits (the exact compressors contribute no error).
+
+`tests/test_kernels_closed_form.py` asserts bit-equality with the core model
+on all 65 536 operand pairs.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+def approx_product_i32(a: Array, b: Array) -> Array:
+    """Proposed approximate signed product; a, b int32 in [-128, 127]."""
+    a = jnp.asarray(a, jnp.int32)
+    b = jnp.asarray(b, jnp.int32)
+    ab = a * b
+
+    # truncated LSP columns 0..6 (7-term masked-operand identity)
+    t = jnp.zeros_like(ab)
+    for i in range(7):
+        t = t + (((a >> i) & 1) * ((b & ((1 << (7 - i)) - 1)) << i))
+
+    # NAND→1 conversion ¬(a7·b0) → constant (error +2^7 when a7·b0)
+    conv = ((a >> 7) & 1) & (b & 1)
+
+    # approximate A+B+C+D+1 compressor at column 7
+    na0b7 = 1 - ((a & 1) & ((b >> 7) & 1))
+    p16 = ((a >> 1) & 1) & ((b >> 6) & 1)
+    p25 = ((a >> 2) & 1) & ((b >> 5) & 1)
+    p34 = ((a >> 3) & 1) & ((b >> 4) & 1)
+    s = p16 + p25 + p34
+    approx_v = 2 * (na0b7 | (s > 0)).astype(jnp.int32) + 1 - (na0b7 & (s == 0))
+    e1a = approx_v - (na0b7 + s + 1)
+
+    raw = ab - t + 192 + (conv << 7) + (e1a << 7)
+
+    # wrap to 16-bit two's complement
+    u = raw & 0xFFFF
+    return jnp.where(u >= 0x8000, u - 0x10000, u)

@@ -1,0 +1,26 @@
+"""Jit'd public wrapper for the Laplacian edge-detection kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.laplacian_conv.kernel import laplacian_conv_pallas
+
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_h",))
+def laplacian_conv(img_i32, block_h: int = 64):
+    """Approximate Laplacian edge map of a signed-domain (H, W) image."""
+    img = jnp.asarray(img_i32, jnp.int32)
+    h, w = img.shape
+    bh = min(block_h, h)
+    pad_h = (-h) % bh
+    padded = jnp.pad(img, ((1, 1 + pad_h), (1, 1)))
+    top = padded[0:h + pad_h, :]
+    mid = padded[1:h + pad_h + 1, :]
+    bot = padded[2:h + pad_h + 2, :]
+    out = laplacian_conv_pallas(top, mid, bot, block_h=bh, interpret=_INTERPRET)
+    return out[:h, :]

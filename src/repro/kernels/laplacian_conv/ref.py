@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the Laplacian edge-detection kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import multiplier as mult
+from repro.nn import conv
+
+
+def laplacian_conv_ref(img_i32):
+    """'same' Laplacian conv of signed-domain pixels via the core model."""
+    return conv.conv2d_int(
+        jnp.asarray(img_i32, jnp.int32), jnp.asarray(conv.LAPLACIAN), mult.approx_multiply
+    )

@@ -1,0 +1,243 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_DRYRUN_EXTRA_XLA", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above run before ANY other import — jax locks the device
+count on first init. 512 placeholder host devices back the production
+meshes: 16×16 single-pod and 2×16×16 multi-pod.
+
+Per cell:
+  * build the model bundle and ShapeDtypeStruct inputs/params (no alloc),
+  * jit the step (train_step = loss+grad+optimizer; serve = prefill or
+    decode_step) with explicit FSDP+TP in_shardings,
+  * ``.lower().compile()`` — sharding mismatches / OOM / unsupported
+    collectives fail HERE, which is the point of the dry-run,
+  * record memory_analysis(), cost_analysis(), and the parsed collective
+    byte totals into a JSON results file for §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch minitron-8b --shape train_4k \
+      [--multi-pod] [--out results.json] [--dot-mode exact]
+  python -m repro.launch.dryrun --all [--out results.json]
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch import mesh as mesh_lib
+from repro.launch import roofline
+from repro.models import registry as reg
+from repro.optim import adafactor, adamw
+
+
+def make_train_step(bundle: reg.ModelBundle, optimizer, accum: int = 1):
+    """Train step with microbatched gradient accumulation.
+
+    accum > 1 bounds peak activation/residual memory to a 1/accum slice of
+    the global batch — the production answer to 1M-token global batches on
+    16 GB chips (the full-batch variant is what rooffix measures, since the
+    two have identical total FLOPs/bytes/collectives per step).
+    """
+    def train_step(params, opt_state, batch):
+        if accum == 1:
+            loss, grads = jax.value_and_grad(bundle.loss_fn)(params, batch)
+        else:
+            def micro(i, carry):
+                acc_loss, acc_grads = carry
+                mb = jax.tree_util.tree_map(
+                    lambda x: jax.lax.dynamic_slice_in_dim(
+                        x, i * (x.shape[0] // accum), x.shape[0] // accum,
+                        axis=0) if getattr(x, "ndim", 0) else x, batch)
+                l, g = jax.value_and_grad(bundle.loss_fn)(params, mb)
+                return (acc_loss + l / accum,
+                        jax.tree_util.tree_map(
+                            lambda a, b: (a.astype(jnp.float32)
+                                          + b.astype(jnp.float32) / accum
+                                          ).astype(a.dtype), acc_grads, g))
+            # bf16 gradient accumulation: halves the persistent accum
+            # buffer for trillion-param configs (production trade-off)
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.bfloat16), params)
+            loss, grads = jax.lax.fori_loop(
+                0, accum, micro, (jnp.zeros((), jnp.float32), zeros))
+        new_params, new_state = optimizer.update(grads, opt_state, params,
+                                                 lr=jnp.float32(1e-4))
+        return loss, new_params, new_state
+    return train_step
+
+
+def pick_optimizer(cfg):
+    # factored moments for the trillion-parameter MoE configs
+    return adafactor() if cfg.n_experts else adamw()
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               dot_mode: str = "exact", donate: bool = True) -> Dict[str, Any]:
+    shape = reg.SHAPES[shape_name]
+    cfg = reg.get_config(arch, dot_mode=dot_mode)
+    bundle = reg._BUILDERS[cfg.family](cfg)
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+
+    t0 = time.time()
+    with mesh:
+        params_sds = reg.param_specs(bundle)
+        import numpy as _np
+        measured = sum(int(_np.prod(l.shape))
+                       for l in jax.tree_util.tree_leaves(params_sds))
+        # measured active params: measured total minus the formula's
+        # (total − active) expert surplus
+        n_active = measured - (cfg.param_count() - cfg.active_param_count())
+        p_shard = mesh_lib.param_shardings(params_sds, mesh)
+        batch_sds = reg.input_specs(cfg, shape)
+        b_shard = mesh_lib.batch_shardings(batch_sds, mesh)
+
+        if shape.kind == "train":
+            optimizer = pick_optimizer(cfg)
+            opt_sds = jax.eval_shape(optimizer.init, params_sds)
+            o_shard = mesh_lib.param_shardings(opt_sds, mesh)
+            # microbatch the 1M-token global batch: peak residuals fit HBM
+            # (trillion-param MoE configs need deeper accumulation)
+            accum = 1
+            for cand in (32, 16, 8):
+                if shape.global_batch % cand == 0 and \
+                        shape.global_batch // cand >= 8:
+                    accum = cand if cfg.param_count() > 3e11 else 8
+                    break
+            step = make_train_step(bundle, optimizer, accum=accum)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_shard, o_shard, b_shard),
+                donate_argnums=(0, 1) if donate else (),
+            )
+            lowered = jitted.lower(params_sds, opt_sds, batch_sds)
+        elif shape.kind == "prefill":
+            jitted = jax.jit(bundle.prefill, in_shardings=(p_shard, b_shard))
+            lowered = jitted.lower(params_sds, batch_sds)
+        else:  # decode
+            state_sds = reg.decode_state_specs(bundle, shape)
+            if cfg.family == "encdec":
+                state_sds["enc_out"] = jax.ShapeDtypeStruct(
+                    (shape.global_batch, cfg.n_frames, cfg.d_model), cfg.dtype)
+            s_shard = mesh_lib.cache_shardings(state_sds, mesh)
+            jitted = jax.jit(
+                bundle.decode_step,
+                in_shardings=(p_shard, s_shard, b_shard),
+                donate_argnums=(1,) if donate else (),
+            )
+            lowered = jitted.lower(params_sds, state_sds, batch_sds)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        cost = compiled.cost_analysis() or {}
+        mem = compiled.memory_analysis()
+        hlo = compiled.as_text()
+
+    rf = roofline.derive(cost, hlo, n_dev,
+                          roofline.model_flops_for(cfg, shape, n_active=n_active))
+    coll = roofline.parse_collectives(hlo)
+    mem_fields = {}
+    for f in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes"):
+        mem_fields[f] = getattr(mem, f, None)
+    result = dict(
+        arch=arch, shape=shape_name,
+        mesh="2x16x16" if multi_pod else "16x16",
+        n_devices=n_dev, kind=shape.kind, dot_mode=dot_mode,
+        params=measured, active_params=n_active,
+        flops_per_device=rf.flops_per_device,
+        bytes_per_device=rf.bytes_per_device,
+        collective_bytes=rf.collective_bytes,
+        collective_breakdown=coll.bytes_by_kind,
+        collective_counts=coll.count_by_kind,
+        model_flops=rf.model_flops,
+        memory=mem_fields,
+        lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+        **rf.row(),
+    )
+    return result
+
+
+def run_cells(cells, out_path: str, dot_mode: str = "exact"):
+    results = []
+    if out_path and os.path.exists(out_path):
+        results = json.load(open(out_path))
+    done = {(r["arch"], r["shape"], r["mesh"], r.get("dot_mode", "exact"))
+            for r in results if r.get("ok", True)}
+    for arch, shape_name, multi_pod in cells:
+        mesh_name = "2x16x16" if multi_pod else "16x16"
+        key = (arch, shape_name, mesh_name, dot_mode)
+        if key in done:
+            print(f"[skip] {key}")
+            continue
+        print(f"[dryrun] {arch} × {shape_name} × {mesh_name} ...", flush=True)
+        try:
+            r = lower_cell(arch, shape_name, multi_pod, dot_mode=dot_mode)
+            r["ok"] = True
+            print(f"  ok: flops/dev={r['flops_per_device']:.3e} "
+                  f"coll={r['collective_bytes']:.3e}B "
+                  f"bottleneck={r['bottleneck']} "
+                  f"compile={r['compile_s']}s", flush=True)
+        except Exception as e:  # noqa: BLE001 — record failures, keep sweeping
+            r = dict(arch=arch, shape=shape_name, mesh=mesh_name,
+                     dot_mode=dot_mode, ok=False, error=f"{type(e).__name__}: {e}",
+                     traceback=traceback.format_exc()[-2000:])
+            print(f"  FAIL: {r['error']}", flush=True)
+        results.append(r)
+        if out_path:
+            json.dump(results, open(out_path, "w"), indent=1, default=str)
+        jax.clear_caches()  # keep the long sweep's RSS bounded
+    return results
+
+
+def all_cells(multi_pod: bool):
+    cells = []
+    for arch in reg.list_archs():
+        if arch == "edge-detect":
+            continue
+        for shape_name in ("train_4k", "prefill_32k", "decode_32k", "long_500k"):
+            if shape_name == "long_500k" and arch not in reg.SUBQUADRATIC:
+                continue
+            cells.append((arch, shape_name, multi_pod))
+    return cells
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default="train_4k", choices=list(reg.SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true", help="every (arch × shape)")
+    ap.add_argument("--out", default="")
+    ap.add_argument("--dot-mode", default="exact")
+    args = ap.parse_args()
+
+    if args.all:
+        cells = all_cells(multi_pod=args.multi_pod)
+        if args.both_meshes:
+            cells = all_cells(False) + all_cells(True)
+    else:
+        assert args.arch, "--arch required unless --all"
+        cells = [(args.arch, args.shape, args.multi_pod)]
+        if args.both_meshes:
+            cells = [(args.arch, args.shape, False), (args.arch, args.shape, True)]
+    results = run_cells(cells, args.out, dot_mode=args.dot_mode)
+    ok = sum(1 for r in results if r.get("ok"))
+    print(f"\n{ok}/{len(results)} cells ok")
+    if not args.out:
+        print(json.dumps(results[-1], indent=2, default=str))
+
+
+if __name__ == "__main__":
+    main()

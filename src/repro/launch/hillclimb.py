@@ -1,0 +1,160 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_DRYRUN_EXTRA_XLA", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Perf hillclimbing driver (§Perf methodology).
+
+For a chosen (arch × shape) cell, lowers named VARIANTS — config knobs
+and/or logical-sharding-rule overrides — and reports the corrected roofline
+terms for each, so a hypothesis → change → measure → validate loop can be
+driven from the EXPERIMENTS.md log.
+
+  python -m repro.launch.hillclimb --arch kimi-k2-1t-a32b --shape train_4k \
+      --variants base,remat_off,attn_chunk_2048 --out results_hillclimb.json
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.launch import mesh as mesh_lib  # noqa: E402
+from repro.launch import roofline  # noqa: E402
+from repro.launch.rooffix import COST_ATTN_CHUNK, COST_LOSS_CHUNK, _metrics_for  # noqa: E402
+from repro.models import lm  # noqa: E402
+from repro.models import registry as reg  # noqa: E402
+from repro.models import sharding as sh  # noqa: E402
+
+# variant -> (config overrides, logical-rule overrides)
+VARIANTS = {
+    "base": ({}, {}),
+    # activation-checkpoint policy: no remat (recompute flops vanish; peak
+    # memory grows — validated against memory_analysis)
+    "remat_off": ({"remat": False}, {}),
+    # attention KV-chunk sizing (VMEM-tile analogue): fewer, larger chunks
+    "attn_chunk_4096": ({"attn_chunk": 4096}, {}),
+    "attn_chunk_8192": ({"attn_chunk": 8192}, {}),
+    # chunked-loss tile
+    "loss_chunk_4096": ({"loss_chunk": 4096}, {}),
+    # sequence parallelism: shard activation seq dim over the model axis
+    "seq_shard": ({}, {"seq": "model"}),
+    # keep experts' capacity dim fully data-sharded but drop the shared
+    # expert (ablation of llama4/kimi shared path)
+    "moe_cap_1.0": ({"capacity_factor": 1.0}, {}),
+    "moe_cap_2.0": ({"capacity_factor": 2.0}, {}),
+    # embedding replicated (kills the vocab all-gather at the loss, pays
+    # memory) — collective-term experiment
+    "emb_replicated": ({}, {"vocab": None}),
+    # decode: shard KV heads over model only (no seq shard of the cache)
+    "kv_headshard": ({"_cache_shard": "heads"}, {}),
+    # long-decode base: 8192-wide cost chunks (decode score tiles are tiny;
+    # bounds the cost-unroll compile time)
+    "long_base": ({"attn_chunk": 8192}, {}),
+    "long_kvhead": ({"attn_chunk": 8192, "_cache_shard": "heads"}, {}),
+    # decode: TP-only weights (resident; kills per-step FSDP gathers)
+    "long_tponly": ({"attn_chunk": 8192, "_no_fsdp": "1"}, {}),
+    # decode: head-sharded KV cache (no seq shard -> no cache permutes)
+    "long_heads": ({"attn_chunk": 8192, "_cache_shard": "heads"}, {}),
+    "attn_chunk_1024c": ({"attn_chunk": 1024}, {}),
+    "attn_chunk_1024": ({"attn_chunk": 1024}, {}),
+    # smaller chunks: the SSD intra-chunk quadratic work/memory is LINEAR
+    # in the chunk size (B·S·c·H) — shrink it
+    "attn_chunk_256": ({"attn_chunk": 256}, {}),
+    "attn_chunk_128": ({"attn_chunk": 128}, {}),
+    # paper's technique at scale: int8 matmuls + separable error correction
+    "approx_stat": ({"dot_mode": "approx_stat"}, {}),
+}
+
+
+def corrected_with(arch: str, shape_name: str, overrides: dict, rules: dict):
+    """Corrected (scan-aware) per-device metrics under variant settings."""
+    shape = reg.SHAPES[shape_name]
+    mesh = mesh_lib.make_production_mesh(multi_pod=False)
+    overrides = dict(overrides)
+    cache_mode = overrides.pop("_cache_shard", None)
+    if cache_mode:
+        os.environ["REPRO_CACHE_SHARD"] = cache_mode
+    if overrides.pop("_no_fsdp", None):
+        os.environ["REPRO_NO_FSDP"] = "1"
+    merged_rules = dict(sh.DEFAULT_RULES)
+    merged_rules.update(rules)
+    sh.set_rules(merged_rules)
+    try:
+        base_cfg = reg.get_config(arch, cost_unroll=True, **overrides)
+        cost_over = dict(overrides)
+        cost_over.setdefault("attn_chunk", COST_ATTN_CHUNK)
+        cost_over.setdefault("loss_chunk", COST_LOSS_CHUNK)
+        overrides = {k: v for k, v in overrides.items()}
+        if base_cfg.family in ("xlstm", "zamba"):
+            cfg = reg.get_config(arch, cost_unroll=True, **cost_over)
+            m = _metrics_for(cfg, shape, mesh)
+            jax.clear_caches()
+            return m
+        period = lm.unit_period(base_cfg)
+        o0, o1 = dict(cost_over), dict(cost_over)
+        o0["n_layers"] = 0
+        o1["n_layers"] = period
+        if base_cfg.family == "encdec":
+            o0["n_encoder_layers"] = 0
+            o1["n_encoder_layers"] = 1
+        m0 = _metrics_for(reg.get_config(arch, cost_unroll=True, **o0), shape, mesh)
+        jax.clear_caches()
+        m1 = _metrics_for(reg.get_config(arch, cost_unroll=True, **o1), shape, mesh)
+        jax.clear_caches()
+        scale = base_cfg.n_layers / period
+        return {k: m0[k] + scale * (m1[k] - m0[k]) for k in ("flops", "bytes", "coll")}
+    finally:
+        sh.set_rules(None)
+        os.environ.pop("REPRO_CACHE_SHARD", None)
+        os.environ.pop("REPRO_NO_FSDP", None)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=list(reg.SHAPES))
+    ap.add_argument("--variants", default="base")
+    ap.add_argument("--out", default="results_hillclimb.json")
+    args = ap.parse_args()
+
+    results = []
+    if os.path.exists(args.out):
+        results = json.load(open(args.out))
+    done = {(r["arch"], r["shape"], r["variant"]) for r in results if r.get("ok")}
+
+    cfg = reg.get_config(args.arch)
+    shape = reg.SHAPES[args.shape]
+    n_active = None
+    for v in args.variants.split(","):
+        if (args.arch, args.shape, v) in done:
+            print(f"[skip] {v}")
+            continue
+        overrides, rules = VARIANTS[v]
+        print(f"[hillclimb] {args.arch} × {args.shape} × {v} ...", flush=True)
+        t0 = time.time()
+        try:
+            m = corrected_with(args.arch, args.shape, overrides, rules)
+            rf = roofline.Roofline(
+                flops_per_device=m["flops"], bytes_per_device=m["bytes"],
+                collective_bytes=m["coll"], n_devices=256,
+                model_flops=roofline.model_flops_for(cfg, shape),
+            )
+            r = dict(arch=args.arch, shape=args.shape, variant=v, ok=True,
+                     flops_per_device=m["flops"], bytes_per_device=m["bytes"],
+                     collective_bytes=m["coll"], secs=round(time.time() - t0, 1),
+                     **rf.row())
+            print(f"  ok: comp={rf.t_compute:.3f}s mem={rf.t_memory:.3f}s "
+                  f"coll={rf.t_collective:.3f}s bneck={rf.bottleneck} "
+                  f"rooffrac={rf.roofline_fraction:.4f}", flush=True)
+        except Exception as e:  # noqa: BLE001
+            r = dict(arch=args.arch, shape=args.shape, variant=v, ok=False,
+                     error=f"{type(e).__name__}: {e}",
+                     traceback=traceback.format_exc()[-1500:])
+            print(f"  FAIL: {r['error']}", flush=True)
+        results.append(r)
+        json.dump(results, open(args.out, "w"), indent=1, default=str)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Render §Dry-run / §Roofline / §Perf markdown from the results JSONs."""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def fmt_e(x):
+    return f"{x:9.2e}"
+
+
+def roofline_table(path="results_roofline.json"):
+    rows = [x for x in json.load(open(path)) if x.get("ok")]
+    out = ["| arch | shape | t_compute s | t_memory s | t_collective s | "
+           "bottleneck | useful | roofline frac |",
+           "|---|---|---|---|---|---|---|---|"]
+    for x in sorted(rows, key=lambda x: (x["arch"], x["shape"])):
+        out.append(
+            f"| {x['arch']} | {x['shape']} | {x['t_compute']:.3g} | "
+            f"{x['t_memory']:.3g} | {x['t_collective']:.3g} | "
+            f"{x['bottleneck']} | {x['useful_ratio']:.3f} | "
+            f"{x['roofline_fraction']:.4f} |")
+    return "\n".join(out)
+
+
+def dryrun_table(path="results_dryrun.json"):
+    rows = [x for x in json.load(open(path)) if x.get("ok")]
+    out = ["| arch | shape | mesh | HBM args GB/dev | HBM temp GB/dev | "
+           "collectives (counts) | compile s |",
+           "|---|---|---|---|---|---|---|"]
+    for x in sorted(rows, key=lambda x: (x["arch"], x["shape"], x["mesh"])):
+        mem = x.get("memory", {})
+        args = (mem.get("argument_size_in_bytes") or 0) / 2**30
+        temp = (mem.get("temp_size_in_bytes") or 0) / 2**30
+        counts = x.get("collective_counts", {})
+        cstr = " ".join(f"{k.split('-')[-1]}:{v}" for k, v in counts.items() if v)
+        out.append(f"| {x['arch']} | {x['shape']} | {x['mesh']} | "
+                   f"{args:.2f} | {temp:.2f} | {cstr} | {x.get('compile_s')} |")
+    return "\n".join(out)
+
+
+def hillclimb_table(path="results_hillclimb.json"):
+    rows = [x for x in json.load(open(path)) if x.get("ok")]
+    out = ["| cell | variant | t_compute s | t_memory s | t_collective s | "
+           "bottleneck | roofline frac |",
+           "|---|---|---|---|---|---|---|"]
+    for x in rows:
+        out.append(f"| {x['arch']}×{x['shape']} | {x['variant']} | "
+                   f"{x['t_compute']:.3g} | {x['t_memory']:.3g} | "
+                   f"{x['t_collective']:.3g} | {x['bottleneck']} | "
+                   f"{x['roofline_fraction']:.4f} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--which", choices=["roofline", "dryrun", "hillclimb"],
+                    required=True)
+    args = ap.parse_args()
+    print({"roofline": roofline_table, "dryrun": dryrun_table,
+           "hillclimb": hillclimb_table}[args.which]())
+
+
+if __name__ == "__main__":
+    main()

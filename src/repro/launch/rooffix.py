@@ -1,0 +1,178 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_DRYRUN_EXTRA_XLA", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Scan-aware roofline correction.
+
+XLA's ``cost_analysis`` counts a ``while``-loop body ONCE regardless of trip
+count, so the raw dry-run under-reports FLOPs/bytes/collective-bytes for
+anything inside (a) the layer scan and (b) the sequence-chunk scans
+(attention KV chunks, chunked loss, SSD/mLSTM chunks).
+
+Correction (per single-pod cell):
+
+  * lower the cell with ``cost_unroll=True`` (inner scans fully unrolled —
+    every chunk iteration is counted) at TWO layer counts: L0 = 0 layers
+    (embed + loss only) and L1 = one scan unit (= the layer-pattern period);
+  * per-unit deltas Δ = m(L1) − m(L0) are exact because the unit scan has
+    trip count 1;
+  * corrected(metric) = m(L0) + (n_layers / period) · Δ.
+
+xlstm / zamba unroll layers in Python already → a single full lowering with
+``cost_unroll=True`` is exact (no differencing needed).
+
+Writes results_roofline.json (merging memory_analysis + compile proof from
+the raw dry-run results).
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.launch import mesh as mesh_lib  # noqa: E402
+from repro.launch import roofline  # noqa: E402
+from repro.launch.dryrun import make_train_step, pick_optimizer  # noqa: E402
+from repro.models import lm  # noqa: E402
+from repro.models import registry as reg  # noqa: E402
+
+COST_ATTN_CHUNK = 2048
+COST_LOSS_CHUNK = 2048
+
+
+def _metrics_for(cfg, shape, mesh) -> dict:
+    """Lower one config at one shape; return flops/bytes/collective bytes."""
+    bundle = reg._BUILDERS[cfg.family](cfg)
+    with mesh:
+        params_sds = reg.param_specs(bundle)
+        p_shard = mesh_lib.param_shardings(params_sds, mesh)
+        batch_sds = reg.input_specs(cfg, shape)
+        b_shard = mesh_lib.batch_shardings(batch_sds, mesh)
+        if shape.kind == "train":
+            optimizer = pick_optimizer(cfg)
+            opt_sds = jax.eval_shape(optimizer.init, params_sds)
+            o_shard = mesh_lib.param_shardings(opt_sds, mesh)
+            step = make_train_step(bundle, optimizer)
+            compiled = jax.jit(step, in_shardings=(p_shard, o_shard, b_shard)) \
+                .lower(params_sds, opt_sds, batch_sds).compile()
+        elif shape.kind == "prefill":
+            compiled = jax.jit(bundle.prefill, in_shardings=(p_shard, b_shard)) \
+                .lower(params_sds, batch_sds).compile()
+        else:
+            state_sds = reg.decode_state_specs(bundle, shape)
+            if cfg.family == "encdec":
+                state_sds["enc_out"] = jax.ShapeDtypeStruct(
+                    (shape.global_batch, cfg.n_frames, cfg.d_model), cfg.dtype)
+            s_shard = mesh_lib.cache_shardings(state_sds, mesh)
+            compiled = jax.jit(bundle.decode_step,
+                               in_shardings=(p_shard, s_shard, b_shard)) \
+                .lower(params_sds, state_sds, batch_sds).compile()
+        cost = compiled.cost_analysis() or {}
+        coll = roofline.parse_collectives(compiled.as_text())
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "coll": float(coll.total_bytes),
+            "coll_by": dict(coll.bytes_by_kind)}
+
+
+def corrected_cell(arch: str, shape_name: str, dot_mode: str = "exact") -> dict:
+    shape = reg.SHAPES[shape_name]
+    base_cfg = reg.get_config(arch, dot_mode=dot_mode, cost_unroll=True,
+                              attn_chunk=COST_ATTN_CHUNK,
+                              loss_chunk=COST_LOSS_CHUNK)
+    mesh = mesh_lib.make_production_mesh(multi_pod=False)
+
+    if base_cfg.family in ("xlstm", "zamba"):
+        m_full = _metrics_for(base_cfg, shape, mesh)
+        return {"flops": m_full["flops"], "bytes": m_full["bytes"],
+                "coll": m_full["coll"], "coll_by": m_full["coll_by"],
+                "method": "full_unrolled"}
+
+    period = lm.unit_period(base_cfg)
+    overrides0 = {"n_layers": 0}
+    overrides1 = {"n_layers": period}
+    if base_cfg.family == "encdec":
+        overrides0["n_encoder_layers"] = 0
+        overrides1["n_encoder_layers"] = 1
+    cfg0 = reg.get_config(arch, dot_mode=dot_mode, cost_unroll=True,
+                          attn_chunk=COST_ATTN_CHUNK,
+                          loss_chunk=COST_LOSS_CHUNK, **overrides0)
+    cfg1 = reg.get_config(arch, dot_mode=dot_mode, cost_unroll=True,
+                          attn_chunk=COST_ATTN_CHUNK,
+                          loss_chunk=COST_LOSS_CHUNK, **overrides1)
+    m0 = _metrics_for(cfg0, shape, mesh)
+    jax.clear_caches()
+    m1 = _metrics_for(cfg1, shape, mesh)
+    jax.clear_caches()
+    scale = base_cfg.n_layers / period
+    out = {}
+    for key in ("flops", "bytes", "coll"):
+        out[key] = m0[key] + scale * (m1[key] - m0[key])
+    out["coll_by"] = {k: m0["coll_by"].get(k, 0.0) + scale *
+                      (m1["coll_by"].get(k, 0.0) - m0["coll_by"].get(k, 0.0))
+                      for k in m1["coll_by"]}
+    out["method"] = f"L0+{scale:g}x(L1-L0), period={period}"
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--raw", default="results_dryrun.json")
+    ap.add_argument("--out", default="results_roofline.json")
+    ap.add_argument("--only-arch", default=None)
+    args = ap.parse_args()
+
+    raw = [r for r in json.load(open(args.raw))
+           if r.get("ok") and r["mesh"] == "16x16"]
+    results = []
+    if os.path.exists(args.out):
+        results = json.load(open(args.out))
+    done = {(r["arch"], r["shape"]) for r in results if r.get("ok")}
+
+    for cell in raw:
+        arch, shape_name = cell["arch"], cell["shape"]
+        if args.only_arch and arch != args.only_arch:
+            continue
+        if (arch, shape_name) in done:
+            continue
+        print(f"[rooffix] {arch} × {shape_name} ...", flush=True)
+        t0 = time.time()
+        try:
+            corr = corrected_cell(arch, shape_name)
+            cfg = reg.get_config(arch)
+            shape = reg.SHAPES[shape_name]
+            rf = roofline.Roofline(
+                flops_per_device=corr["flops"],
+                bytes_per_device=corr["bytes"],
+                collective_bytes=corr["coll"],
+                n_devices=cell["n_devices"],
+                model_flops=roofline.model_flops_for(
+                    cfg, shape, n_active=cell["active_params"]),
+            )
+            merged = dict(cell)
+            merged.update(
+                flops_per_device=corr["flops"], bytes_per_device=corr["bytes"],
+                collective_bytes=corr["coll"],
+                collective_breakdown=corr["coll_by"],
+                correction=corr["method"], fix_s=round(time.time() - t0, 1),
+                **rf.row(),
+            )
+            merged["ok"] = True
+            print(f"  ok ({merged['fix_s']}s): bottleneck={rf.bottleneck} "
+                  f"useful={rf.useful_flops_ratio:.3f} "
+                  f"rooffrac={rf.roofline_fraction:.4f}", flush=True)
+        except Exception as e:  # noqa: BLE001
+            merged = dict(arch=arch, shape=shape_name, ok=False,
+                          error=f"{type(e).__name__}: {e}",
+                          traceback=traceback.format_exc()[-1500:])
+            print(f"  FAIL: {merged['error']}", flush=True)
+        results.append(merged)
+        json.dump(results, open(args.out, "w"), indent=1, default=str)
+    ok = sum(1 for r in results if r.get("ok"))
+    print(f"\n{ok}/{len(results)} corrected")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,155 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Three terms, per (arch × shape × mesh), all in seconds (TPU v5e targets):
+
+  compute    = HLO_FLOPs_per_device / peak_FLOPs            (197 TFLOP/s bf16)
+  memory     = HLO_bytes_per_device / HBM_bw                (819 GB/s)
+  collective = collective_bytes_per_device / link_bw        (~50 GB/s/link)
+
+FLOPs/bytes come from ``compiled.cost_analysis()``. Collective bytes are NOT
+in cost_analysis: we parse the post-SPMD HLO text and sum operand sizes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link (~3 links usable; 1-link worst case)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]+(?:[0-9]+)?|pred)\[([0-9,]*)\]")
+
+
+def _tensor_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int]
+    count_by_kind: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum output-shape bytes of every collective op in post-SPMD HLO."""
+    bytes_by = {k: 0 for k in _COLLECTIVES}
+    count_by = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        # op lines look like: %name = bf16[256,1024]{1,0} all-reduce(...)
+        m = re.search(r"=\s*(\(?[a-z0-9\[\],{}\s]+\)?)\s+([a-z\-]+)", stripped)
+        if not m:
+            continue
+        op = m.group(2)
+        if op.endswith("-start"):
+            op = op[:-6]
+        if op not in _COLLECTIVES:
+            continue
+        shapes = _SHAPE_RE.findall(m.group(1))
+        total = sum(_tensor_bytes(dt, dims) for dt, dims in shapes)
+        bytes_by[op] += total
+        count_by[op] += 1
+    return CollectiveStats(bytes_by, count_by)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes: float
+    n_devices: int
+    model_flops: float          # 6·N·D (train) or 2·N_active·D (inference)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / total HLO FLOPs (remat/dispatch overhead detector)."""
+        total = self.flops_per_device * self.n_devices
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Achievable fraction of compute roofline: useful-compute time over
+        the dominating term (bound estimate, not a wall-clock measurement)."""
+        t_useful = (self.model_flops / self.n_devices) / PEAK_FLOPS
+        t_bound = max(self.t_compute, self.t_memory, self.t_collective)
+        return t_useful / t_bound if t_bound else 0.0
+
+    def row(self) -> dict:
+        return dict(
+            t_compute=self.t_compute, t_memory=self.t_memory,
+            t_collective=self.t_collective, bottleneck=self.bottleneck,
+            useful_ratio=self.useful_flops_ratio,
+            roofline_fraction=self.roofline_fraction,
+        )
+
+
+def derive(cost_analysis: dict, hlo_text: str, n_devices: int,
+           model_flops: float) -> Roofline:
+    flops = float(cost_analysis.get("flops", 0.0))
+    byts = float(cost_analysis.get("bytes accessed", 0.0))
+    coll = parse_collectives(hlo_text)
+    return Roofline(
+        flops_per_device=flops,
+        bytes_per_device=byts,
+        collective_bytes=float(coll.total_bytes),
+        n_devices=n_devices,
+        model_flops=model_flops,
+    )
+
+
+def model_flops_for(cfg, shape, n_active: float | None = None) -> float:
+    """MODEL_FLOPS per step: 6·N_active·D (train) / 2·N_active·D (fwd).
+
+    n_active: measured active-parameter count (falls back to the config
+    formula when not provided).
+    """
+    if n_active is None:
+        n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch

@@ -1,0 +1,108 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Wires config → model bundle → optimizer → fault-tolerant TrainLoop over a
+mesh (production 16×16 / 2×16×16, or a debug mesh over local devices).
+Reduced-size overrides make the same path runnable on one CPU for the
+examples and tests; the dry-run covers the full-scale lowering.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+
+from repro.data import SyntheticLMStream
+from repro.launch import mesh as mesh_lib
+from repro.models import registry as reg
+from repro.optim import adafactor, adamw, warmup_cosine
+from repro.train import TrainLoop, TrainLoopConfig
+
+
+def add_reduced_overrides(ap: argparse.ArgumentParser):
+    ap.add_argument("--n-layers", type=int, default=None)
+    ap.add_argument("--d-model", type=int, default=None)
+    ap.add_argument("--d-ff", type=int, default=None)
+    ap.add_argument("--vocab", type=int, default=None)
+    ap.add_argument("--n-heads", type=int, default=None)
+    ap.add_argument("--n-kv-heads", type=int, default=None)
+    ap.add_argument("--n-experts", type=int, default=None)
+    ap.add_argument("--dot-mode", default=None,
+                    choices=["exact", "int8", "approx_stat", "approx_bitexact",
+                             "approx_lut"])
+
+
+def overrides_from(args) -> dict:
+    keys = {"n_layers": args.n_layers, "d_model": args.d_model,
+            "d_ff": args.d_ff, "vocab": args.vocab, "n_heads": args.n_heads,
+            "n_kv_heads": args.n_kv_heads, "n_experts": args.n_experts,
+            "dot_mode": args.dot_mode}
+    return {k: v for k, v in keys.items() if v is not None}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=reg.list_archs())
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--mesh", choices=["none", "debug", "pod", "multipod"],
+                    default="none")
+    ap.add_argument("--metrics-out", default="")
+    add_reduced_overrides(ap)
+    args = ap.parse_args()
+
+    cfg = reg.get_config(args.arch, **overrides_from(args))
+    bundle = reg._BUILDERS[cfg.family](cfg)
+    optimizer = adafactor() if cfg.n_experts else adamw()
+
+    loop = TrainLoop(
+        bundle.loss_fn, optimizer,
+        TrainLoopConfig(total_steps=args.steps, ckpt_every=args.ckpt_every,
+                        ckpt_dir=args.ckpt_dir, lr=args.lr,
+                        grad_accum=args.grad_accum),
+        lr_schedule=warmup_cosine(args.lr, max(1, args.steps // 10), args.steps),
+    )
+    stream = SyntheticLMStream(vocab=cfg.vocab, batch=args.batch,
+                               seq_len=args.seq_len, seed=0)
+
+    mesh = None
+    if args.mesh == "debug":
+        mesh = mesh_lib.make_debug_mesh()
+    elif args.mesh == "pod":
+        mesh = mesh_lib.make_production_mesh(multi_pod=False)
+    elif args.mesh == "multipod":
+        mesh = mesh_lib.make_production_mesh(multi_pod=True)
+
+    def run():
+        params, opt_state, start = loop.init_or_restore(
+            lambda: bundle.init_params(jax.random.PRNGKey(0)))
+        print(f"[train] arch={args.arch} start_step={start} "
+              f"params={sum(x.size for x in jax.tree_util.tree_leaves(params)):,}")
+        loop.run(params, opt_state, stream, start,
+                 on_step=lambda s, l: (s % 10 == 0) and print(
+                     f"  step {s:5d} loss {l:.4f}", flush=True))
+
+    if mesh is not None:
+        with mesh:
+            run()
+    else:
+        run()
+
+    print(f"[train] done: final_loss={loop.metrics['final_loss']:.4f} "
+          f"stragglers={loop.metrics['straggler_steps']} "
+          f"resumed_from={loop.metrics['resumed_from']}")
+    if args.metrics_out:
+        json.dump({k: v for k, v in loop.metrics.items() if k != "losses"} |
+                  {"losses_head": loop.metrics["losses"][:5],
+                   "losses_tail": loop.metrics["losses"][-5:]},
+                  open(args.metrics_out, "w"), indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Quantized / approximate neural-network layers."""
+from repro.nn import approx_dot, conv, quant  # noqa: F401

@@ -1,0 +1,75 @@
+"""2-D convolution under the approximate multiplier (paper §4).
+
+The paper's application: 3×3 Laplacian edge detection where every
+pixel×coefficient product runs through the proposed approximate signed
+multiplier, followed by exact accumulation (the MAC's adder tree is exact).
+
+Pixels are mapped to the signed 8-bit operand domain by an arithmetic right
+shift (0..255 → 0..127), matching the fixed-point convention of
+approximate-multiplier papers; kernel coefficients are signed 8-bit already.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import multiplier as mult
+
+Array = jnp.ndarray
+
+LAPLACIAN = np.array([[-1, -1, -1], [-1, 8, -1], [-1, -1, -1]], dtype=np.int32)
+
+
+def to_signed_pixels(img: Array) -> Array:
+    """uint8 image (0..255) → signed operand domain (0..127)."""
+    return (jnp.asarray(img, jnp.int32) >> 1).astype(jnp.int32)
+
+
+def conv2d_int(img: Array, kernel: Array,
+               product_fn: Callable[[Array, Array], Array]) -> Array:
+    """Zero-padded 'same' 2-D convolution with a custom scalar product.
+
+    img: (H, W) int32 in [-128, 127]; kernel: (kh, kw) int32 in [-128, 127].
+    Accumulation is exact int32 (the MAC adder is exact in the paper).
+    """
+    kh, kw = kernel.shape
+    ph, pw = kh // 2, kw // 2
+    x = jnp.pad(jnp.asarray(img, jnp.int32), ((ph, ph), (pw, pw)))
+    h, w = img.shape
+    out = jnp.zeros((h, w), jnp.int32)
+    for di in range(kh):
+        for dj in range(kw):
+            coeff = kernel[di, dj]
+            patch = jax.lax.dynamic_slice(x, (di, dj), (h, w))
+            out = out + product_fn(patch, jnp.full((), int(coeff), jnp.int32))
+    return out
+
+
+def edge_detect(img_u8: Array, mult_name: str = "proposed") -> Array:
+    """Laplacian edge map with the named multiplier; returns uint8 map."""
+    fn = mult.ALL_MULTIPLIERS[mult_name]
+    px = to_signed_pixels(img_u8)
+    raw = conv2d_int(px, jnp.asarray(LAPLACIAN), fn)
+    return jnp.clip(raw, 0, 255).astype(jnp.uint8)
+
+
+def psnr(ref: Array, test: Array, peak: float = 255.0) -> float:
+    """PSNR in dB between two uint8 images (paper Fig. 9 metric)."""
+    r = jnp.asarray(ref, jnp.float64)
+    t = jnp.asarray(test, jnp.float64)
+    mse = jnp.mean((r - t) ** 2)
+    return float(jnp.where(mse == 0, jnp.inf, 10.0 * jnp.log10(peak**2 / mse)))
+
+
+def conv2d_float(x: Array, kernel: Array) -> Array:
+    """Float reference conv ('same', zero pad) used by NN-layer tests."""
+    kh, kw = kernel.shape
+    xp = jnp.pad(x, ((kh // 2, kh // 2), (kw // 2, kw // 2)))
+    out = jnp.zeros_like(x)
+    for di in range(kh):
+        for dj in range(kw):
+            out = out + kernel[di, dj] * jax.lax.dynamic_slice(xp, (di, dj), x.shape)
+    return out

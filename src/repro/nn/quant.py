@@ -1,0 +1,55 @@
+"""Symmetric int8 quantization for the approximate-multiplier execution modes.
+
+The paper's multiplier consumes signed 8-bit operands; integrating it into a
+neural network therefore requires a quantization boundary. We use standard
+symmetric absmax quantization: per-tensor (dynamic) for activations and
+per-output-channel (static or dynamic) for weights, matching common int8
+inference practice.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+INT8_MAX = 127.0
+
+
+@dataclasses.dataclass(frozen=True)
+class Quantized:
+    """int8 values + float scale such that ``values * scale ≈ original``."""
+
+    values: Array  # int8
+    scale: Array   # f32, broadcastable against values
+
+    def dequantize(self) -> Array:
+        return self.values.astype(jnp.float32) * self.scale
+
+
+def _absmax(x: Array, axes: Sequence[int] | None) -> Array:
+    m = jnp.max(jnp.abs(x), axis=axes, keepdims=True) if axes is not None else jnp.max(jnp.abs(x))
+    return jnp.maximum(m.astype(jnp.float32), 1e-8)
+
+
+def quantize(x: Array, axes: Sequence[int] | None = None) -> Quantized:
+    """Symmetric absmax quantization to int8.
+
+    axes: reduction axes for the scale (None = per-tensor). E.g. for a weight
+    of shape (in, out), ``axes=(0,)`` gives a per-output-channel scale.
+    """
+    scale = _absmax(x, axes) / INT8_MAX
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return Quantized(q, scale)
+
+
+def fake_quantize(x: Array, axes: Sequence[int] | None = None) -> Array:
+    """Quantize→dequantize (straight-through value); used in QAT-style tests."""
+    q = quantize(x, axes)
+    return q.dequantize().astype(x.dtype)
+
+
+def quantization_error(x: Array, axes: Sequence[int] | None = None) -> Array:
+    return jnp.abs(fake_quantize(x, axes) - x)

@@ -1,0 +1,4 @@
+"""Optimizers + schedules + gradient utilities (pure-JAX, sharding-aware)."""
+from repro.optim.adafactor import adafactor  # noqa: F401
+from repro.optim.adamw import adamw  # noqa: F401
+from repro.optim.schedule import warmup_cosine  # noqa: F401

@@ -1,0 +1,65 @@
+"""Adafactor (factored second moments) — the memory-sane optimizer for the
+trillion-parameter MoE configs (m: optional momentum off by default).
+
+State per >=2-D leaf: {"vr": shape[:-1], "vc": shape[:-2] + shape[-1:]};
+1-D leaves fall back to a full second moment {"v": shape}.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import Optimizer
+
+
+def adafactor(decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0) -> Optimizer:
+    def init(params):
+        def leaf(p):
+            if p.ndim >= 2:
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"step": jnp.zeros((), jnp.int32),
+                "mv": jax.tree_util.tree_map(leaf, params)}
+
+    def update(grads, state, params, lr):
+        step = state["step"] + 1
+        beta = 1.0 - (step.astype(jnp.float32) + 1.0) ** (-decay)
+
+        def leaf(g, mv, p):
+            # second-moment statistics in f32 (fused square+mean reductions);
+            # the big elementwise update path stays in the gradient dtype —
+            # halves peak optimizer temporaries on trillion-param leaves
+            if p.ndim >= 2:
+                vr = beta * mv["vr"] + (1 - beta) * (
+                    jnp.square(g.astype(jnp.float32)).mean(axis=-1) + eps)
+                vc = beta * mv["vc"] + (1 - beta) * (
+                    jnp.square(g.astype(jnp.float32)).mean(axis=-2) + eps)
+                denom = vr[..., None] * vc[..., None, :] / jnp.maximum(
+                    vr.mean(axis=-1)[..., None, None], eps)
+                scale = jax.lax.rsqrt(denom + eps).astype(g.dtype)
+                upd = g * scale
+                new_mv = {"vr": vr, "vc": vc}
+            else:
+                v = beta * mv["v"] + (1 - beta) * (
+                    jnp.square(g.astype(jnp.float32)) + eps)
+                upd = g * jax.lax.rsqrt(v + eps).astype(g.dtype)
+                new_mv = {"v": v}
+            # update clipping (RMS_threshold = 1.0; reduction in f32)
+            rms = jnp.sqrt(jnp.mean(jnp.square(upd.astype(jnp.float32))) + eps)
+            clip = (1.0 / jnp.maximum(1.0, rms / clip_threshold)).astype(jnp.float32)
+            newp = (p.astype(jnp.float32)
+                    - lr * clip * upd.astype(jnp.float32)).astype(p.dtype)
+            return newp, new_mv
+
+        flat = jax.tree_util.tree_map(
+            leaf, grads, state["mv"], params,
+            is_leaf=lambda x: isinstance(x, dict) and set(x) <= {"vr", "vc", "v"})
+        new_params = jax.tree_util.tree_map(
+            lambda x: x[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+        new_mv = jax.tree_util.tree_map(
+            lambda x: x[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"step": step, "mv": new_mv}
+
+    return Optimizer(init, update)

@@ -1,0 +1,2 @@
+"""Batched serving engine."""
+from repro.serving.engine import ServingEngine  # noqa: F401

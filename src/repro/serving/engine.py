@@ -1,0 +1,116 @@
+"""Batched LM serving engine: prefill + greedy/temperature decode.
+
+A single-process continuous-batching core: requests are padded into a fixed
+batch, prefilled token-by-token through ``decode_step`` (uniform code path —
+no separate prefill graph to keep per-request state simple), then decoded
+until EOS/max_tokens. Per-slot state lives in the model's KV caches; slots
+free as requests finish and are refilled from the queue.
+
+For the large-scale path, the *dry-run* lowers the dedicated ``prefill``
+graph (chunked attention, full-sequence); this engine is the functional
+small-scale server used by the examples and tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: List[int]
+    max_tokens: int = 16
+    temperature: float = 0.0
+    eos_id: Optional[int] = None
+    # filled by the engine
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, bundle, params, batch_size: int = 4,
+                 max_len: int = 256, seed: int = 0):
+        self.bundle = bundle
+        self.cfg = bundle.cfg
+        self.params = params
+        self.batch = batch_size
+        self.max_len = max_len
+        self.rng = np.random.default_rng(seed)
+        self._decode = jax.jit(bundle.decode_step)
+        self._reset_state()
+
+    def _reset_state(self):
+        self.state = self.bundle.init_decode_state(self.batch, self.max_len)
+        if self.cfg.family == "encdec":
+            self.state["enc_out"] = jnp.zeros(
+                (self.batch, self.cfg.n_frames, self.cfg.d_model), self.cfg.dtype)
+
+    def _step(self, tokens: np.ndarray, cache_len: int):
+        batch = {"token": jnp.asarray(tokens.reshape(self.batch, 1), jnp.int32),
+                 "cache_len": jnp.asarray(cache_len, jnp.int32)}
+        logits, self.state = self._decode(self.params, self.state, batch)
+        return np.asarray(logits[:, 0, :], np.float32)
+
+    def _sample(self, logits: np.ndarray, temps: np.ndarray) -> np.ndarray:
+        out = np.empty(self.batch, np.int64)
+        for i in range(self.batch):
+            if temps[i] <= 0:
+                out[i] = logits[i].argmax()
+            else:
+                z = logits[i] / temps[i]
+                z -= z.max()
+                p = np.exp(z)
+                p /= p.sum()
+                out[i] = self.rng.choice(len(p), p=p)
+        return out
+
+    def generate(self, requests: List[Request]) -> List[Request]:
+        """Serve a list of requests with continuous slot refill."""
+        queue = list(requests)
+        slots: List[Optional[Request]] = [None] * self.batch
+        pos = np.zeros(self.batch, np.int64)          # per-slot cache length
+
+        # NOTE: the shared cache_len is the max over slots; per-slot masking
+        # is handled by feeding pad tokens for idle slots (logits ignored).
+        active_any = True
+        cache_len = 0
+        self._reset_state()
+        cursor = np.zeros(self.batch, np.int64)       # prompt cursor
+        while active_any and cache_len < self.max_len - 1:
+            # refill empty slots
+            for i in range(self.batch):
+                if slots[i] is None and queue:
+                    slots[i] = queue.pop(0)
+                    cursor[i] = 0
+                    pos[i] = cache_len              # prompt starts here
+            tokens = np.zeros(self.batch, np.int64)
+            for i, r in enumerate(slots):
+                if r is None or r.done:
+                    continue
+                if cursor[i] < len(r.prompt):
+                    tokens[i] = r.prompt[int(cursor[i])]
+                elif r.output:
+                    tokens[i] = r.output[-1]
+            logits = self._step(tokens, cache_len)
+            temps = np.array([r.temperature if r else 0.0 for r in slots])
+            nxt = self._sample(logits, temps)
+            for i, r in enumerate(slots):
+                if r is None or r.done:
+                    continue
+                cursor[i] += 1
+                if cursor[i] >= len(r.prompt):       # past prefill: emit
+                    tok = int(nxt[i])
+                    r.output.append(tok)
+                    if (r.eos_id is not None and tok == r.eos_id) or \
+                            len(r.output) >= r.max_tokens:
+                        r.done = True
+                        slots[i] = None if not queue else None
+            cache_len += 1
+            active_any = any(r is not None and not r.done for r in slots) or bool(queue)
+        for r in requests:
+            r.done = True
+        return requests

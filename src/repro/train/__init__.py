@@ -1,0 +1,2 @@
+"""Training loop with fault tolerance."""
+from repro.train.loop import TrainLoop, TrainLoopConfig  # noqa: F401

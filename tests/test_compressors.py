@@ -1,0 +1,95 @@
+"""Compressor truth tables and statistics vs paper Table 2 (exact match)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import compressors as comp
+
+
+def test_exact3_is_sum_plus_one():
+    assert list(comp.EXACT3.values) == [1, 2, 2, 3, 2, 3, 3, 4]
+    assert (comp.EXACT3.errors == 0).all()
+
+
+def test_exact4_is_sum_plus_one():
+    assert (comp.EXACT4.errors == 0).all()
+    assert comp.EXACT4.values[0b1111] == 5
+
+
+@pytest.mark.parametrize("name,stats", sorted(comp.PAPER_TABLE2_STATS.items()))
+def test_table2_pe_emean(name, stats):
+    """P_E and E_mean match the paper's Table 2 bottom rows exactly."""
+    c = comp.ALL_3INPUT[name]
+    pe, emean = stats
+    assert c.error_probability() == pytest.approx(pe, abs=1e-12)
+    assert c.mean_error() == pytest.approx(emean, abs=1e-12)
+
+
+def test_proposed3_gates_match_table():
+    """Gate-level boolean form reproduces the truth table bit-for-bit."""
+    for idx in range(8):
+        a, b, c = (idx >> 2) & 1, (idx >> 1) & 1, idx & 1
+        carry, s = comp.proposed3_gates(jnp.array(a), jnp.array(b), jnp.array(c))
+        assert 2 * int(carry) + int(s) == comp.PROPOSED3.values[idx]
+
+
+def test_proposed4_gates_match_table():
+    for idx in range(16):
+        a, b, c, d = (idx >> 3) & 1, (idx >> 2) & 1, (idx >> 1) & 1, idx & 1
+        carry, s = comp.proposed4_gates(*map(jnp.array, (a, b, c, d)))
+        assert 2 * int(carry) + int(s) == comp.PROPOSED4.values[idx]
+
+
+def test_proposed4_reconstruction_stats():
+    """DESIGN.md §3 reconstruction: P_E = 58/256, E_mean = +7/256."""
+    c = comp.PROPOSED4
+    assert c.error_probability() == pytest.approx(58 / 256, abs=1e-12)
+    assert c.mean_error() == pytest.approx(7 / 256, abs=1e-12)
+    # error cases sit on low-probability combos (each ≤ 9/256)
+    probs = c.input_probs()
+    assert probs[c.errors != 0].max() <= 9 / 256 + 1e-12
+
+
+def test_proposed4_table3_fragments():
+    """Legible fragments of paper Table 3: row 1111 → approx 3 (ED −2);
+    row 1000 (highest-probability combo) is exact."""
+    c = comp.PROPOSED4
+    assert c.values[0b1111] == 3 and c.errors[0b1111] == -2
+    assert c.errors[0b1000] == 0
+    assert c.values[0b0000] == 1  # 0+1 exact
+
+
+def test_input_probability_distribution():
+    """A is NAND-generated (P=3/4), rest AND-generated (P=1/4); probs sum to 1."""
+    for c in comp.ALL.values():
+        p = c.input_probs()
+        assert p.sum() == pytest.approx(1.0)
+    p3 = comp.PROPOSED3.input_probs()
+    assert p3[0b100] == pytest.approx(27 / 64)  # A=1,B=0,C=0
+    p4 = comp.PROPOSED4.input_probs()
+    assert p4[0b1000] == pytest.approx(81 / 256)
+    assert p4[0b0000] == pytest.approx(27 / 256)
+
+
+def test_pack_bits():
+    idx = comp.pack_bits([jnp.array(1), jnp.array(0), jnp.array(1)])
+    assert int(idx) == 0b101
+    idx4 = comp.pack_bits([jnp.array(1), jnp.array(1), jnp.array(0), jnp.array(1)])
+    assert int(idx4) == 0b1101
+
+
+def test_carry_sum_bits_consistent():
+    for c in comp.ALL.values():
+        if c.name.startswith("exact"):
+            continue
+        idx = jnp.arange(2 ** c.n_inputs)
+        v = 2 * c.carry_bit(idx) + c.sum_bit(idx)
+        np.testing.assert_array_equal(np.asarray(v), c.values)
+
+
+def test_approximate_values_at_most_3():
+    """Approximate designs emit only {carry, sum} — values ≤ 3."""
+    for c in comp.ALL.values():
+        if c.name.startswith("exact"):
+            continue
+        assert c.values.max() <= 3, c.name

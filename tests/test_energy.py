@@ -1,0 +1,56 @@
+"""Unit-gate hardware model: calibration, orderings, headline savings."""
+import pytest
+
+from repro.core import energy
+
+
+def test_calibration_on_exact_row():
+    e = energy.estimate("exact")
+    assert e["area"] == pytest.approx(2204.75, rel=1e-6)
+    assert e["power"] == pytest.approx(178.10, rel=1e-6)
+    assert e["delay"] == pytest.approx(3.28, rel=1e-6)
+
+
+def test_proposed_is_best_on_power_and_pdp():
+    t = energy.table5()
+    prop = t["proposed"]
+    for name, row in t.items():
+        if name == "proposed":
+            continue
+        assert prop["power"] < row["power"], name
+        assert prop["pdp"] < row["pdp"], name
+
+
+def test_headline_savings_vs_du2022():
+    """Paper: −14.39 % power, −29.21 % PDP vs [2]. Model bands: 8–30 / 15–45."""
+    s = energy.savings_vs("proposed", "design_du2022")
+    assert 8.0 < s["power"] < 30.0
+    assert 15.0 < s["pdp"] < 45.0
+    assert s["delay"] > 0  # proposed is also faster (paper: 2.10 vs 2.54 ns)
+
+
+def test_truncation_saves_over_half_the_power():
+    s = energy.savings_vs("proposed", "exact")
+    assert s["power"] > 40.0
+    assert s["area"] > 40.0
+
+
+def test_orderings_match_paper_where_structural():
+    """Truncating designs ([2], proposed) are smaller than tree-wide ones."""
+    t = energy.table5()
+    for tree_wide in ("design_esposito2018", "design_strollo2020", "design_akbari2017"):
+        assert t["proposed"]["area"] < t[tree_wide]["area"]
+        assert t["design_du2022"]["area"] < t[tree_wide]["area"]
+
+
+def test_reduce_columns_terminates_and_counts():
+    n_fa, n_ha, stages = energy.reduce_columns([8, 8, 8, 8])
+    assert n_fa > 0 and stages >= 3
+    n_fa2, _, stages2 = energy.reduce_columns([2, 2])
+    assert n_fa2 == 0 and stages2 == 0
+
+
+def test_all_designs_estimable():
+    for d in energy.DESIGNS:
+        e = energy.estimate(d)
+        assert all(v > 0 for v in e.values()), d

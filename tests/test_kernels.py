@@ -1,0 +1,120 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + property tests."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import metrics, multiplier as m
+from repro.kernels.closed_form import approx_product_i32
+from repro.kernels.approx_mul.ops import approx_mul
+from repro.kernels.approx_mul.ref import approx_mul_ref
+from repro.kernels.approx_matmul.ops import approx_matmul
+from repro.kernels.approx_matmul.ref import approx_matmul_ref
+from repro.kernels.laplacian_conv.ops import laplacian_conv
+from repro.kernels.laplacian_conv.ref import laplacian_conv_ref
+
+RNG = np.random.default_rng(1234)
+
+
+def _rand(shape, lo=-128, hi=128, dtype=np.int32):
+    return RNG.integers(lo, hi, shape).astype(dtype)
+
+
+def test_closed_form_equals_core_exhaustive():
+    a, b = metrics.operand_grid(8)
+    ref = np.asarray(m.approx_multiply(a, b))
+    got = np.asarray(approx_product_i32(a, b))
+    np.testing.assert_array_equal(got, ref)
+
+
+@pytest.mark.parametrize("shape", [(1, 1), (7, 5), (64, 128), (128, 257), (3, 1000), (513, 130)])
+def test_approx_mul_shapes(shape):
+    a, b = _rand(shape), _rand(shape)
+    np.testing.assert_array_equal(np.asarray(approx_mul(a, b)), np.asarray(approx_mul_ref(a, b)))
+
+
+@pytest.mark.parametrize("dtype", [np.int8, np.int16, np.int32])
+def test_approx_mul_dtypes(dtype):
+    a = _rand((33, 47), dtype=dtype)
+    b = _rand((33, 47), dtype=dtype)
+    np.testing.assert_array_equal(np.asarray(approx_mul(a, b)), np.asarray(approx_mul_ref(a, b)))
+
+
+def test_approx_mul_3d_shape():
+    a, b = _rand((4, 9, 31)), _rand((4, 9, 31))
+    np.testing.assert_array_equal(np.asarray(approx_mul(a, b)), np.asarray(approx_mul_ref(a, b)))
+
+
+@pytest.mark.parametrize(
+    "mkn", [(1, 1, 1), (8, 16, 8), (17, 29, 23), (64, 128, 64), (130, 70, 129), (5, 300, 2)]
+)
+def test_approx_matmul_shapes(mkn):
+    mm, kk, nn = mkn
+    a, b = _rand((mm, kk)), _rand((kk, nn))
+    got = np.asarray(approx_matmul(a, b))
+    ref = np.asarray(approx_matmul_ref(a, b))
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_approx_matmul_blocks():
+    a, b = _rand((96, 96)), _rand((96, 96))
+    ref = np.asarray(approx_matmul_ref(a, b))
+    for bm, bn, bk in [(32, 32, 32), (96, 96, 96), (48, 128, 8)]:
+        got = np.asarray(approx_matmul(a, b, block_m=bm, block_n=bn, block_k=bk))
+        np.testing.assert_array_equal(got, ref, err_msg=f"{bm},{bn},{bk}")
+
+
+@pytest.mark.parametrize("shape", [(3, 3), (8, 8), (45, 61), (64, 64), (65, 129)])
+def test_laplacian_conv_shapes(shape):
+    img = _rand(shape, lo=0, hi=128)
+    np.testing.assert_array_equal(
+        np.asarray(laplacian_conv(img)), np.asarray(laplacian_conv_ref(img))
+    )
+
+
+def test_laplacian_conv_block_sizes():
+    img = _rand((100, 40), lo=0, hi=128)
+    ref = np.asarray(laplacian_conv_ref(img))
+    for bh in (16, 25, 100):
+        np.testing.assert_array_equal(np.asarray(laplacian_conv(img, block_h=bh)), ref)
+
+
+# ---------------------------------------------------------------------------
+# Property-based tests (hypothesis)
+# ---------------------------------------------------------------------------
+
+int8_val = st.integers(min_value=-128, max_value=127)
+
+
+@settings(max_examples=50, deadline=None)
+@given(a=int8_val, b=int8_val)
+def test_property_closed_form_bounded_error(a, b):
+    """|approx − exact| ≤ 769 + 128 + 256 (truncation + conversion + e1a)."""
+    approx = int(approx_product_i32(jnp.int32(a), jnp.int32(b)))
+    assert abs(approx - a * b) <= 769 + 128 + 256
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m_=st.integers(1, 24), k_=st.integers(1, 24), n_=st.integers(1, 24),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_matmul_matches_oracle(m_, k_, n_, seed):
+    r = np.random.default_rng(seed)
+    a = r.integers(-128, 128, (m_, k_)).astype(np.int32)
+    b = r.integers(-128, 128, (k_, n_)).astype(np.int32)
+    np.testing.assert_array_equal(
+        np.asarray(approx_matmul(a, b)), np.asarray(approx_matmul_ref(a, b))
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_property_mul_commutativity_asymmetry(seed):
+    """The multiplier is NOT symmetric (A-input is the negative pp) — but
+    must still satisfy sign structure: f(a,b) stays within int16."""
+    r = np.random.default_rng(seed)
+    a = r.integers(-128, 128, (64,)).astype(np.int32)
+    b = r.integers(-128, 128, (64,)).astype(np.int32)
+    out = np.asarray(approx_mul(a, b))
+    assert out.min() >= -(1 << 15) and out.max() < (1 << 15)

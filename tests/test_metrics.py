@@ -1,0 +1,53 @@
+"""Error-metric machinery + LUT consistency."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import lut, metrics, multiplier as m
+
+
+def test_operand_grid_covers_space():
+    a, b = metrics.operand_grid(8)
+    assert a.shape == (65536,)
+    assert int(a.min()) == -128 and int(a.max()) == 127
+
+
+def test_exact_multiplier_has_zero_error():
+    rep = metrics.evaluate(m.exact_multiply, "exact")
+    assert rep.er == 0 and rep.med == 0 and rep.mred == 0
+
+
+def test_report_row_formatting():
+    rep = metrics.evaluate(m.exact_multiply, "exact")
+    assert "exact" in rep.row() and "ER=" in rep.row()
+
+
+def test_lut_matches_function_exhaustively():
+    table = lut.build_lut("proposed")
+    assert table.shape == (256, 256)
+    a, b = metrics.operand_grid(8)
+    direct = np.asarray(m.approx_multiply(a, b))
+    via_lut = np.asarray(lut.lut_multiply(a, b, jnp.asarray(table)))
+    np.testing.assert_array_equal(direct, via_lut)
+
+
+def test_error_lut_and_moments():
+    e = lut.error_lut("proposed")
+    mom = lut.error_moments("proposed")
+    assert abs(mom["mean"] - e.astype(np.float64).mean()) < 1e-9
+    # mean error (bias) is small relative to max product
+    assert abs(mom["mean"]) < 100
+    assert mom["max_abs"] < 2048
+
+
+def test_exact_lut_is_products():
+    t = lut.build_lut("exact")
+    v = np.arange(-128, 128, dtype=np.int64)
+    np.testing.assert_array_equal(t, v[:, None] * v[None, :])
+
+
+def test_all_multipliers_evaluate():
+    reps = metrics.evaluate_all(
+        {k: m.ALL_MULTIPLIERS[k] for k in ("proposed", "design_du2022")}
+    )
+    assert reps["proposed"].mred < reps["design_du2022"].mred * 1.1

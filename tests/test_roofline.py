@@ -1,0 +1,68 @@
+"""Roofline derivation: HLO collective parsing + term math."""
+import pytest
+
+from repro.launch import roofline
+
+
+HLO = """
+HloModule test
+ENTRY main {
+  %p0 = bf16[256,1024]{1,0} parameter(0)
+  %ag = bf16[256,16384]{1,0} all-gather(%p0), dimensions={1}
+  %ar = f32[1024,1024]{1,0} all-reduce(%x), to_apply=%add
+  %rs = f32[64,1024]{1,0} reduce-scatter(%y), dimensions={0}
+  %a2a = s8[2048,128]{1,0} all-to-all(%z), dimensions={0}
+  %cp = bf16[8,128]{1,0} collective-permute(%w), source_target_pairs={{0,1}}
+  %ags = (bf16[512,512]{1,0}, bf16[512,512]{1,0}) all-gather-start(%v), dimensions={0}
+  %dot = f32[128,128]{1,0} dot(%a, %b)
+}
+"""
+
+
+def test_parse_collectives_bytes():
+    stats = roofline.parse_collectives(HLO)
+    assert stats.bytes_by_kind["all-gather"] == 256 * 16384 * 2 + 2 * 512 * 512 * 2
+    assert stats.bytes_by_kind["all-reduce"] == 1024 * 1024 * 4
+    assert stats.bytes_by_kind["reduce-scatter"] == 64 * 1024 * 4
+    assert stats.bytes_by_kind["all-to-all"] == 2048 * 128 * 1
+    assert stats.bytes_by_kind["collective-permute"] == 8 * 128 * 2
+    assert stats.count_by_kind["all-gather"] == 2  # incl. -start form
+
+
+def test_parse_ignores_non_collectives():
+    stats = roofline.parse_collectives("%dot = f32[4,4] dot(%a, %b)")
+    assert stats.total_bytes == 0
+
+
+def test_roofline_terms_and_bottleneck():
+    rf = roofline.Roofline(
+        flops_per_device=197e12,      # exactly 1 s of compute
+        bytes_per_device=819e9 / 2,   # 0.5 s of HBM
+        collective_bytes=50e9 / 4,    # 0.25 s of ICI
+        n_devices=256,
+        model_flops=197e12 * 256 * 0.5,
+    )
+    assert rf.t_compute == pytest.approx(1.0)
+    assert rf.t_memory == pytest.approx(0.5)
+    assert rf.t_collective == pytest.approx(0.25)
+    assert rf.bottleneck == "compute"
+    assert rf.useful_flops_ratio == pytest.approx(0.5)
+    assert rf.roofline_fraction == pytest.approx(0.5)
+
+
+def test_model_flops_kinds():
+    from repro.models import registry as reg
+    cfg = reg.get_config("minitron-8b")
+    tr = roofline.model_flops_for(cfg, reg.SHAPES["train_4k"], n_active=1e9)
+    pf = roofline.model_flops_for(cfg, reg.SHAPES["prefill_32k"], n_active=1e9)
+    dc = roofline.model_flops_for(cfg, reg.SHAPES["decode_32k"], n_active=1e9)
+    assert tr == 6e9 * 256 * 4096
+    assert pf == 2e9 * 32 * 32768
+    assert dc == 2e9 * 128
+
+
+def test_tensor_bytes_dtypes():
+    assert roofline._tensor_bytes("bf16", "2,3") == 12
+    assert roofline._tensor_bytes("f32", "10") == 40
+    assert roofline._tensor_bytes("s8", "7,3") == 21
+    assert roofline._tensor_bytes("pred", "4") == 4
