@@ -3,8 +3,13 @@
 The paper reports PSNR on an unspecified image with unspecified
 postprocessing (proposed: 20.13 dB). PSNR is strongly image/harness
 dependent (see EXPERIMENTS.md §Fig9) — we report our harness (pixels>>1,
-clip-[0,255]) on both a geometric test card and a photo-statistics image,
-plus the Pallas-kernel path timing.
+clip-[0,255]) on both a geometric test card and a photo-statistics image.
+
+Everything runs through the batched substrate pipeline
+(``nn.conv.edge_detect_batched``): the design sweep enumerates every wiring
+in ``core.multiplier.ALL_MULTIPLIERS`` through the LUT substrate
+(bit-identical to the scalar loop), and a second sweep times an 8-image
+batch on every registered substrate — no hand-maintained mode lists.
 """
 from __future__ import annotations
 
@@ -12,28 +17,42 @@ import time
 
 import numpy as np
 
-from repro.data import photo_like, test_image
+from repro.core import multiplier as mult
+from repro.data import image_batch, photo_like, test_image
 from repro.nn import conv
+from repro.nn import substrate as sub
 
 
-def run() -> list:
+def run(substrates=None) -> list:
     rows = []
-    designs = ["proposed", "design_du2022", "design_strollo2020",
-               "design_du2024", "design_guo2019", "design_esposito2018",
-               "design_akbari2017", "design_krishna2024"]
+    designs = [n for n in mult.ALL_MULTIPLIERS if n != "exact"]
     for img_name, img in (("testcard", test_image(96, 96)),
                           ("photo", photo_like(128, 128))):
-        ref = np.asarray(conv.edge_detect(img, "exact"))
+        batch = img[None]
+        ref = np.asarray(conv.edge_detect_batched(batch, "exact"))[0]
         print(f"\n== Fig 9: edge detection PSNR vs exact ({img_name}) ==")
         for name in designs:
+            s = sub.get_substrate("approx_lut", mult_name=name)
             t0 = time.perf_counter()
-            out = np.asarray(conv.edge_detect(img, name))
+            out = np.asarray(conv.edge_detect_batched(batch, s))[0]
             us = (time.perf_counter() - t0) * 1e6
             p = conv.psnr(ref, out)
             print(f"{name:>22s} PSNR={p:6.2f} dB")
             rows.append((f"fig9/{img_name}/{name}", us, f"psnr={p:.2f}dB"))
 
-    # Pallas kernel path (interpret mode on CPU)
+    # batched pipeline (8 images) across every registered substrate
+    imgs = image_batch(8, 64, 64)
+    specs = list(substrates) if substrates else sub.list_substrates()
+    print("\n== Fig 9: batched edge detection (8x64x64) per substrate ==")
+    for spec in specs:
+        s = sub.get_substrate(spec)
+        t0 = time.perf_counter()
+        _ = np.asarray(conv.edge_detect_batched(imgs, s))
+        us = (time.perf_counter() - t0) * 1e6
+        print(f"{spec:>16s}: {us:10.0f} us/batch")
+        rows.append((f"fig9/batched8/{s.meta.label}", us, "imgs=8x64x64"))
+
+    # Pallas laplacian_conv kernel path (interpret mode on CPU)
     from repro.kernels.laplacian_conv.ops import laplacian_conv
     img = test_image(96, 96)
     px = (np.asarray(img, np.int32) >> 1)

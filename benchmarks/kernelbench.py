@@ -1,9 +1,10 @@
-"""Kernel micro-benchmarks (beyond paper): approximate execution modes.
+"""Kernel micro-benchmarks (beyond paper): product-substrate sweep.
 
-Times the XLA-lowered execution modes of the approximate matmul on CPU
-(Pallas kernels are validated in interpret mode — wall-clock kernel numbers
-only mean something on real TPU; the XLA modes give the CPU-comparable
-throughput picture and the relative cost of bit-exact emulation).
+Times the integer contraction (``dot_int8``) of every substrate registered
+in ``repro.nn.substrate`` — no hand-maintained mode list — on CPU. Pallas
+substrates run in interpret mode here (wall-clock kernel numbers only mean
+something on real TPU); the XLA modes give the CPU-comparable throughput
+picture and the relative cost of bit-exact emulation.
 """
 from __future__ import annotations
 
@@ -13,7 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.nn import approx_dot as ad
+from repro.nn import substrate as sub
 
 
 def _time(f, *args, iters=5):
@@ -26,20 +27,24 @@ def _time(f, *args, iters=5):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def run() -> list:
+def run(substrates=None) -> list:
     rows = []
     rng = np.random.default_rng(0)
     m, k, n = 256, 512, 256
     a8 = jnp.asarray(rng.integers(-128, 128, (m, k)), jnp.int8)
     b8 = jnp.asarray(rng.integers(-128, 128, (k, n)), jnp.int8)
-    print("\n== kernel bench: int8 matmul modes (256x512x256, CPU) ==")
+    specs = list(substrates) if substrates else sub.list_substrates()
+    print(f"\n== kernel bench: int8 matmul substrates ({m}x{k}x{n}, CPU) ==")
     macs = m * k * n
-    for mode in ("int8", "approx_stat", "approx_lut", "approx_bitexact"):
-        f = jax.jit(lambda a, b, md=mode: ad.approx_matmul_int8(a, b, mode=md))
+    for spec in specs:
+        s = sub.get_substrate(spec)
+        f = jax.jit(lambda a, b, _s=s: _s.dot_int8(a, b))
         us = _time(f, a8, b8)
         gmacs = macs / us / 1e3
-        print(f"{mode:>16s}: {us:10.0f} us  ({gmacs:6.2f} GMAC/s)")
-        rows.append((f"kernel/matmul_{mode}", us, f"gmacs={gmacs:.2f}"))
+        note = " [interpret]" if s.meta.preferred_backend == "tpu" \
+            and jax.default_backend() != "tpu" else ""
+        print(f"{spec:>16s}: {us:10.0f} us  ({gmacs:6.2f} GMAC/s){note}")
+        rows.append((f"kernel/matmul_{s.meta.label}", us, f"gmacs={gmacs:.2f}"))
 
     from repro.kernels.approx_mul.ops import approx_mul
     x = jnp.asarray(rng.integers(-128, 128, (512, 512)), jnp.int32)

@@ -1,7 +1,9 @@
 """Benchmark harness — one module per paper table/figure.
 
 Prints a ``name,us_per_call,derived`` CSV at the end (plus human-readable
-tables as it goes). ``python -m benchmarks.run [--only table4]``.
+tables as it goes). ``python -m benchmarks.run [--only table4]
+[--substrates exact,approx_pallas]`` — the substrate-sweep benches (fig9,
+kernel) default to every substrate registered in ``repro.nn.substrate``.
 """
 from __future__ import annotations
 
@@ -30,18 +32,27 @@ MODULES = {
 }
 
 
+# benches that sweep the ProductSubstrate registry (accept substrates=[...])
+_SUBSTRATE_SWEEPS = ("fig9", "kernel")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, choices=list(MODULES))
+    ap.add_argument("--substrates", default=None,
+                    help="CSV of substrate specs for the sweep benches "
+                         "(default: all registered)")
     args = ap.parse_args()
+    substrates = args.substrates.split(",") if args.substrates else None
 
     rows = []
     failed = False
     for name, mod in MODULES.items():
         if args.only and name != args.only:
             continue
+        kwargs = {"substrates": substrates} if name in _SUBSTRATE_SWEEPS else {}
         try:
-            rows.extend(mod.run())
+            rows.extend(mod.run(**kwargs))
         except Exception:  # noqa: BLE001
             failed = True
             print(f"[bench {name}] FAILED:\n{traceback.format_exc()}",

@@ -1,13 +1,15 @@
 """The paper's application (§4): Laplacian edge detection through the
-approximate multiplier — core model, Pallas kernel path, and PSNR table.
+approximate multiplier — batched substrate pipeline, Pallas kernel path,
+and PSNR table.
 
 Run: PYTHONPATH=src python examples/edge_detection.py
 """
 import numpy as np
 
-from repro.data import photo_like, test_image
+from repro.data import image_batch, photo_like, test_image
 from repro.kernels.laplacian_conv.ops import laplacian_conv
 from repro.nn import conv
+from repro.nn import substrate as sub
 
 
 def ascii_render(img: np.ndarray, width: int = 48) -> str:
@@ -35,22 +37,35 @@ def main():
           f"(PSNR {conv.psnr(exact, approx):.2f} dB):")
     print(ascii_render(approx))
 
-    # Pallas kernel path computes the same edge map bit-exactly
+    # batched pipeline: a whole image batch through one substrate contraction,
+    # per-image bit-identical to the single-image reference path above
+    imgs = image_batch(8, 96, 96)
+    batched = np.asarray(conv.edge_detect_batched(imgs, "approx_bitexact:proposed"))
+    singles = np.stack([np.asarray(conv.edge_detect(im, "proposed")) for im in imgs])
+    assert np.array_equal(batched, singles), "batched pipeline must match the loop"
+    print(f"\nbatched edge detection ({imgs.shape[0]} images) == single-image loop: OK")
+
+    # Pallas substrate computes the same batch bit-exactly (interpret off-TPU)
+    pallas = np.asarray(conv.edge_detect_batched(imgs[:2], "approx_pallas"))
+    assert np.array_equal(pallas, singles[:2]), "Pallas substrate must match"
+    print("approx_pallas substrate output == core model: OK")
+
+    # dedicated Laplacian Pallas kernel agrees with the core model too
     px = np.asarray(img, np.int32) >> 1
     kern = np.asarray(laplacian_conv(px))
     ref = np.asarray(conv.conv2d_int(px, conv.LAPLACIAN,
-                                     __import__("repro.core.multiplier",
-                                                fromlist=["m"]).approx_multiply))
+                                     sub.get_substrate("approx_bitexact").scalar))
     assert np.array_equal(kern, ref), "Pallas kernel must match the core model"
-    print("\nPallas laplacian_conv kernel output == core model: OK")
+    print("Pallas laplacian_conv kernel output == core model: OK")
 
-    print("\nPSNR across designs (photo-statistics image):")
+    print("\nPSNR across designs (photo-statistics image, LUT substrate):")
     photo = photo_like(128, 128)
-    ref = np.asarray(conv.edge_detect(photo, "exact"))
+    ref = np.asarray(conv.edge_detect_batched(photo[None], "exact"))[0]
     for name in ("proposed", "design_du2022", "design_strollo2020",
                  "design_esposito2018"):
-        p = conv.psnr(ref, np.asarray(conv.edge_detect(photo, name)))
-        print(f"  {name:>22s}: {p:6.2f} dB")
+        s = sub.get_substrate("approx_lut", mult_name=name)
+        out = np.asarray(conv.edge_detect_batched(photo[None], s))[0]
+        print(f"  {name:>22s}: {conv.psnr(ref, out):6.2f} dB")
 
 
 if __name__ == "__main__":

@@ -2,6 +2,11 @@
 
 Not an LM — selects the conv pipeline + Pallas kernel; registered for
 --arch completeness so the paper's app is a first-class config.
+
+``dot_mode`` is a ProductSubstrate spec (``repro.nn.substrate``); the
+parameterized form pins the multiplier wiring explicitly. Override to
+``"approx_pallas"`` for the TPU kernel path or ``"approx_lut:<design>"``
+for any baseline wiring.
 """
 from repro.models.common import ModelConfig
 from repro.models.registry import register
@@ -15,5 +20,5 @@ CONFIG = register(ModelConfig(
     n_kv_heads=1,
     d_ff=64,
     vocab=256,
-    dot_mode="approx_bitexact",
+    dot_mode="approx_bitexact:proposed",
 ))

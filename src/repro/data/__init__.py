@@ -1,3 +1,3 @@
 """Data pipelines: synthetic LM stream + procedural images."""
-from repro.data.images import photo_like, test_image  # noqa: F401
+from repro.data.images import image_batch, photo_like, test_image  # noqa: F401
 from repro.data.synthetic import SyntheticLMStream  # noqa: F401

@@ -14,6 +14,23 @@ def test_image(h: int = 96, w: int = 96) -> np.ndarray:
     return img.astype(np.uint8)
 
 
+def image_batch(n: int = 8, h: int = 64, w: int = 64, seed: int = 0) -> np.ndarray:
+    """(n, h, w) uint8 batch of distinct procedural images.
+
+    Alternates shifted geometric test cards with photo-statistics images so a
+    batch exercises both hard edges and natural gradients — the batched
+    edge-detection pipeline (``nn.conv.edge_detect_batched``) consumes this.
+    """
+    base = test_image(h, w)
+    out = np.empty((n, h, w), np.uint8)
+    for i in range(n):
+        if i % 2 == 0:
+            out[i] = np.roll(base, (i * 3) % w, axis=1)
+        else:
+            out[i] = photo_like(h, w, seed=seed + i)
+    return out
+
+
 def photo_like(h: int = 128, w: int = 128, seed: int = 3) -> np.ndarray:
     """Natural-statistics image: low-frequency background + objects + texture."""
     r = np.random.default_rng(seed)

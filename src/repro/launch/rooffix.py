@@ -69,7 +69,7 @@ def _metrics_for(cfg, shape, mesh) -> dict:
             compiled = jax.jit(bundle.decode_step,
                                in_shardings=(p_shard, s_shard, b_shard)) \
                 .lower(params_sds, state_sds, batch_sds).compile()
-        cost = compiled.cost_analysis() or {}
+        cost = roofline.normalize_cost_analysis(compiled.cost_analysis())
         coll = roofline.parse_collectives(compiled.as_text())
     return {"flops": float(cost.get("flops", 0.0)),
             "bytes": float(cost.get("bytes accessed", 0.0)),

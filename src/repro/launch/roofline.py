@@ -123,8 +123,28 @@ class Roofline:
         )
 
 
-def derive(cost_analysis: dict, hlo_text: str, n_devices: int,
+def normalize_cost_analysis(cost_analysis) -> dict:
+    """``Compiled.cost_analysis()`` → one flat dict, across JAX versions.
+
+    Older JAX returns ``[{...}]`` (one dict per executable program), newer
+    returns the dict directly; either may be ``None``. Multiple program
+    dicts are summed key-wise (numeric values only).
+    """
+    if not cost_analysis:
+        return {}
+    if isinstance(cost_analysis, dict):
+        return cost_analysis
+    merged: Dict[str, float] = {}
+    for entry in cost_analysis:
+        for k, v in (entry or {}).items():
+            if isinstance(v, (int, float)):
+                merged[k] = merged.get(k, 0.0) + float(v)
+    return merged
+
+
+def derive(cost_analysis, hlo_text: str, n_devices: int,
            model_flops: float) -> Roofline:
+    cost_analysis = normalize_cost_analysis(cost_analysis)
     flops = float(cost_analysis.get("flops", 0.0))
     byts = float(cost_analysis.get("bytes accessed", 0.0))
     coll = parse_collectives(hlo_text)

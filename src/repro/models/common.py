@@ -10,9 +10,10 @@ lower efficiently at 1T-parameter scale:
   materialize);
 * MoE uses capacity-based sort-free dispatch (bincount ranks + scatter),
   giving the true T·k/E expert FLOP profile instead of dense all-experts;
-* every matmul routes through ``dense()`` which consults
-  ``cfg.dot_mode`` — the paper's approximate multiplier is a first-class
-  execution mode of the whole model zoo.
+* every matmul routes through ``dense()`` which resolves ``cfg.dot_mode``
+  through the :mod:`repro.nn.substrate` ProductSubstrate registry — the
+  paper's approximate multiplier (and its Pallas TPU kernel,
+  ``approx_pallas``) is a first-class execution mode of the whole model zoo.
 """
 from __future__ import annotations
 
@@ -25,7 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import sharding as sh
-from repro.nn import approx_dot as ad
+from repro.nn import substrate as psub
 
 Array = jnp.ndarray
 Params = Dict[str, Any]
@@ -69,7 +70,9 @@ class ModelConfig:
     n_encoder_layers: int = 0
     # execution
     dtype: Any = jnp.bfloat16
-    dot_mode: str = "exact"        # exact | int8 | approx_stat | approx_bitexact | approx_lut
+    dot_mode: str = "exact"        # substrate spec "backend[:mult_name]" —
+                                   # any repro.nn.substrate backend: exact |
+                                   # int8 | approx_{bitexact,lut,stat,pallas}
     remat: bool = True
     attn_chunk: int = 512
     loss_chunk: int = 512
@@ -128,11 +131,13 @@ class ModelConfig:
 
 
 def dense(cfg: ModelConfig, x: Array, w: Array, b: Optional[Array] = None) -> Array:
-    """Matmul under the configured execution mode (the paper's technique)."""
-    if cfg.dot_mode == "exact":
-        out = jnp.dot(x, w.astype(x.dtype))
-    else:
-        out = ad.approx_dot(x, w, mode=cfg.dot_mode)
+    """Matmul under the configured product substrate (the paper's technique).
+
+    ``cfg.dot_mode`` is a substrate spec; resolution is an lru-cached dict
+    lookup, so per-call overhead is negligible and bundles can also resolve
+    it once at build time (``registry.build_bundle``).
+    """
+    out = psub.get_substrate(cfg.dot_mode).dot(x, w)
     if b is not None:
         out = out + b.astype(out.dtype)
     return out

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.models import common as cm
 from repro.models import encdec, lm, xlstm, zamba
+from repro.nn import substrate as psub
 
 Array = jnp.ndarray
 
@@ -46,6 +47,8 @@ class ModelBundle:
     prefill: Callable          # (params, batch) -> logits
     decode_step: Callable      # (params, state, batch) -> (logits, state)
     init_decode_state: Callable
+    # cfg.dot_mode resolved once at build time (ProductSubstrate instance)
+    substrate: Any = None
 
 
 def _lm_bundle(cfg: cm.ModelConfig) -> ModelBundle:
@@ -97,13 +100,31 @@ def _encdec_bundle(cfg: cm.ModelConfig) -> ModelBundle:
     )
 
 
+def _with_substrate(builder: Callable) -> Callable:
+    """Wrap a family builder so cfg.dot_mode resolves to a substrate object
+    exactly once at bundle build (get_substrate is lru-cached, so layers
+    re-resolving by spec string hit the same instance)."""
+
+    def build(cfg: cm.ModelConfig) -> ModelBundle:
+        bundle = builder(cfg)
+        return dataclasses.replace(
+            bundle, substrate=psub.get_substrate(cfg.dot_mode))
+
+    return build
+
+
 _BUILDERS = {
-    "lm": _lm_bundle,
-    "vlm": _lm_bundle,
-    "xlstm": _xlstm_bundle,
-    "zamba": _zamba_bundle,
-    "encdec": _encdec_bundle,
+    "lm": _with_substrate(_lm_bundle),
+    "vlm": _with_substrate(_lm_bundle),
+    "xlstm": _with_substrate(_xlstm_bundle),
+    "zamba": _with_substrate(_zamba_bundle),
+    "encdec": _with_substrate(_encdec_bundle),
 }
+
+
+def build_bundle(cfg: cm.ModelConfig) -> ModelBundle:
+    """Build a bundle from an explicit config (registered or reduced)."""
+    return _BUILDERS[cfg.family](cfg)
 
 _REGISTRY: Dict[str, cm.ModelConfig] = {}
 

@@ -1,2 +1,13 @@
-"""Quantized / approximate neural-network layers."""
-from repro.nn import approx_dot, conv, quant  # noqa: F401
+"""Quantized / approximate neural-network layers.
+
+``repro.nn.substrate`` holds the ProductSubstrate registry — the single
+dispatch point for every scalar-product execution mode (exact, int8,
+approx_bitexact, approx_lut, approx_stat, approx_pallas).
+"""
+from repro.nn import approx_dot, conv, quant, substrate  # noqa: F401
+from repro.nn.substrate import (  # noqa: F401
+    ProductSubstrate,
+    SubstrateMeta,
+    get_substrate,
+    list_substrates,
+)

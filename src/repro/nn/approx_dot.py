@@ -1,6 +1,10 @@
-"""Matrix multiplication under the paper's approximate multiplier.
+"""Matrix multiplication under the paper's approximate multiplier (façade).
 
-Execution modes (selectable per layer / per config):
+Thin compatibility layer over :mod:`repro.nn.substrate` — all product-mode
+selection goes through the :class:`~repro.nn.substrate.ProductSubstrate`
+registry; this module keeps the historical function signatures.
+
+Execution modes (= registered substrates, selectable per layer / per config):
 
 * ``exact``          — plain dot in the compute dtype (fp reference).
 * ``int8``           — symmetric int8 quantization, exact int32 matmul.
@@ -11,118 +15,47 @@ Execution modes (selectable per layer / per config):
 * ``approx_lut``     — same contraction through the 256×256 product LUT
                        (gather-based; asserted equal to approx_bitexact).
 * ``approx_stat``    — exact int32 matmul + *separable statistical error
-                       model*: E[e(a,b)] ≈ r[a] + c[b] − µ, where e is the
-                       multiplier's error LUT, r/c its row/column means. Adds
-                       two gathers + two rank-1 terms, lowers to MXU-friendly
-                       HLO, and is the deployment-scale stand-in used by the
-                       multi-pod dry-runs (the Pallas kernel replaces it on
-                       real hardware). Beyond-paper contribution.
+                       model*: E[e(a,b)] ≈ r[a] + c[b] − µ. MXU-friendly
+                       deployment-scale stand-in. Beyond-paper contribution.
+* ``approx_pallas``  — the tiled Pallas TPU kernel
+                       (``kernels/approx_matmul``); interpret-mode fallback
+                       off-TPU, bit-identical to ``approx_bitexact``.
+
+A mode string may carry a multiplier wiring suffix
+(``"approx_lut:design_du2022"``); see :func:`repro.nn.substrate.get_substrate`.
 
 NOTE: the approximate multiplier maps (0,0) → +192 (compensation constant
 fires regardless of operands — true to the netlist), so padded/zero entries
-still contribute; contraction helpers mask accordingly where needed.
+still contribute; the substrates' contraction helpers mask accordingly.
 """
 from __future__ import annotations
 
-import functools
 from typing import Literal
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import lut as lut_lib
-from repro.core import multiplier as mult
-from repro.nn import quant
+from repro.nn import substrate as sub
 
 Array = jnp.ndarray
-Mode = Literal["exact", "int8", "approx_bitexact", "approx_lut", "approx_stat"]
-
-_K_CHUNK = 16  # k-slab size for the bit-exact contraction
-
-
-@functools.lru_cache(maxsize=None)
-def _stat_tables(mult_name: str) -> tuple[np.ndarray, np.ndarray, float]:
-    """Separable error model (r[a], c[b], µ) from the error LUT."""
-    e = lut_lib.error_lut(mult_name).astype(np.float64)
-    mu = e.mean()
-    r = e.mean(axis=1) - 0.5 * mu
-    c = e.mean(axis=0) - 0.5 * mu
-    return r.astype(np.float32), c.astype(np.float32), float(mu)
-
-
-def _bitexact_contract(a8: Array, b8: Array, product_fn) -> Array:
-    """sum_k f(a[m,k], b[k,n]) with f an arbitrary int8×int8→int32 model."""
-    m, k = a8.shape
-    k2, n = b8.shape
-    assert k == k2, (a8.shape, b8.shape)
-    pad = (-k) % _K_CHUNK
-    if pad:
-        # pad with zeros, then subtract the spurious f(0,0)=192 contributions
-        a8 = jnp.pad(a8, ((0, 0), (0, pad)))
-        b8 = jnp.pad(b8, ((0, pad), (0, 0)))
-    steps = a8.shape[1] // _K_CHUNK
-    a3 = a8.reshape(m, steps, _K_CHUNK).transpose(1, 0, 2).astype(jnp.int32)
-    b3 = b8.reshape(steps, _K_CHUNK, n).astype(jnp.int32)
-
-    def body(acc, slabs):
-        a_c, b_c = slabs  # (m, ck), (ck, n)
-        prod = product_fn(a_c[:, :, None], b_c[None, :, :])  # (m, ck, n)
-        return acc + prod.sum(axis=1), None
-
-    acc0 = jnp.zeros((m, n), jnp.int32)
-    acc, _ = jax.lax.scan(body, acc0, (a3, b3))
-    if pad:
-        f00 = int(product_fn(jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32)))
-        acc = acc - f00 * pad
-    return acc
+Mode = Literal["exact", "int8", "approx_bitexact", "approx_lut",
+               "approx_stat", "approx_pallas"]
 
 
 def approx_matmul_int8(a8: Array, b8: Array, mode: Mode = "approx_bitexact",
-                       mult_name: str = "proposed") -> Array:
-    """Integer-domain contraction of int8 operands under the chosen mode."""
-    a8 = a8.astype(jnp.int8)
-    b8 = b8.astype(jnp.int8)
-    if mode == "int8":
-        return jax.lax.dot_general(
-            a8, b8, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
-        )
-    if mode == "approx_bitexact":
-        fn = mult.ALL_MULTIPLIERS[mult_name]
-        return _bitexact_contract(a8, b8, fn)
-    if mode == "approx_lut":
-        table = jnp.asarray(lut_lib.build_lut(mult_name))
-        return _bitexact_contract(
-            a8, b8, lambda x, y: table[x + 128, y + 128]
-        )
-    if mode == "approx_stat":
-        exact = jax.lax.dot_general(
-            a8, b8, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
-        )
-        r, c, _mu = _stat_tables(mult_name)
-        k = a8.shape[1]
-        ra = jnp.asarray(r)[a8.astype(jnp.int32) + 128].sum(axis=1)  # (m,)
-        cb = jnp.asarray(c)[b8.astype(jnp.int32) + 128].sum(axis=0)  # (n,)
-        corr = ra[:, None] + cb[None, :]
-        return exact + corr.astype(jnp.int32)
-    raise ValueError(f"unknown integer mode: {mode}")
+                       mult_name: str | None = None) -> Array:
+    """Integer-domain contraction of int8 operands under the chosen mode.
+
+    mult_name defaults to the mode string's suffix, else ``"proposed"``.
+    """
+    return sub.get_substrate(mode, mult_name=mult_name).dot_int8(a8, b8)
 
 
 def approx_dot(x: Array, w: Array, mode: Mode = "exact",
-               mult_name: str = "proposed") -> Array:
+               mult_name: str | None = None) -> Array:
     """``x @ w`` with the paper's multiplier as the scalar-product unit.
 
     x: (..., K) activations (any float dtype); w: (K, N) weights.
     Activations use a per-tensor dynamic scale; weights per-output-channel.
     Returns the result in x's dtype.
     """
-    if mode == "exact":
-        return jnp.dot(x, w.astype(x.dtype))
-    batch_shape = x.shape[:-1]
-    k = x.shape[-1]
-    x2 = x.reshape(-1, k)
-    qx = quant.quantize(x2, axes=None)           # per-tensor scalar scale
-    qw = quant.quantize(w, axes=(0,))            # per-output-channel (1, N)
-    acc = approx_matmul_int8(qx.values, qw.values, mode=mode, mult_name=mult_name)
-    out = acc.astype(jnp.float32) * (qx.scale * qw.scale)
-    return out.reshape(*batch_shape, w.shape[-1]).astype(x.dtype)
+    return sub.get_substrate(mode, mult_name=mult_name).dot(x, w)

@@ -1,0 +1,429 @@
+"""Product-substrate layer: one registry for every scalar-product unit.
+
+The paper's thesis is that a single scalar-product unit — the sign-focused-
+compressor approximate multiplier — can be swapped underneath convolution and
+matmul workloads. This module makes that swap a first-class object instead of
+stringly-typed ``if mode == ...`` chains: a :class:`ProductSubstrate` bundles
+the three contraction capabilities every workload needs
+
+* ``scalar(a, b)``   — the raw int8×int8→int32 product model,
+* ``dot_int8(a, b)`` — integer-domain (M,K)@(K,N) contraction (exact adder),
+* ``dot(x, w)``      — float-domain matmul through the int8 quantization
+                       boundary (per-tensor activations, per-channel weights),
+* ``conv2d(imgs,k)`` — batched NHW(C) 'same' convolution via im2col + dot,
+
+plus :class:`SubstrateMeta` (bit-exactness, preferred backend, cost hints)
+so launchers/benchmarks can reason about a substrate without running it.
+
+Registered backends (``list_substrates()``):
+
+* ``exact``           — float reference dot; exact integer contraction.
+* ``int8``            — symmetric int8 quantization, exact int32 matmul.
+* ``approx_bitexact`` — every scalar product through the closed-form
+                        multiplier model; bit-identical to the netlist.
+* ``approx_lut``      — same contraction through the 256×256 product LUT.
+* ``approx_stat``     — exact int32 matmul + separable statistical error
+                        model (MXU-friendly deployment stand-in).
+* ``approx_pallas``   — the tiled Pallas TPU kernel
+                        (``kernels/approx_matmul``), interpret-mode fallback
+                        off-TPU; bit-identical to ``approx_bitexact``.
+
+Spec strings select a backend and a multiplier wiring at once:
+``"approx_lut:design_du2022"`` — any name in
+``core.multiplier.ALL_MULTIPLIERS`` is reachable. A bare backend name
+defaults to the paper's ``proposed`` wiring.
+
+NOTE: the approximate multiplier maps (0,0) → +192 (compensation constant
+fires regardless of operands — true to the netlist), so zero padding of the
+contraction dimension injects spurious contributions; every backend corrects
+for f(0,0) where it pads.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lut as lut_lib
+from repro.core import multiplier as mult
+from repro.nn import quant
+
+Array = jnp.ndarray
+
+_K_CHUNK = 16  # k-slab size for the bit-exact contraction
+
+
+# ---------------------------------------------------------------------------
+# Protocol + metadata
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SubstrateMeta:
+    """Static facts about a substrate, for dispatch-free reasoning.
+
+    bit_exact:        product values are bit-identical to the hardware netlist
+                      (exact backends are trivially bit-exact to *their* model).
+    scalar_faithful:  ``dot_int8(a, b) == Σ_k scalar(a_k, b_k)`` exactly —
+                      holds for everything except the statistical error model,
+                      which is defined at contraction level (one rounding of
+                      the separable correction per output element).
+    preferred_backend: "tpu" for kernels that only pay off on real hardware,
+                      "any" otherwise.
+    cost_hint:        dominant execution resource: "mxu" | "vpu" | "gather" |
+                      "scalar-emulation".
+    """
+
+    name: str
+    mult_name: str
+    bit_exact: bool
+    scalar_faithful: bool
+    preferred_backend: str
+    cost_hint: str
+
+    @property
+    def spec(self) -> str:
+        return f"{self.name}:{self.mult_name}"
+
+    @property
+    def label(self) -> str:
+        """Short display name: bare backend for default wirings, full spec
+        otherwise (keeps benchmark row names distinct across wirings)."""
+        return self.name if self.mult_name in ("exact", "proposed") else self.spec
+
+
+@runtime_checkable
+class ProductSubstrate(Protocol):
+    """Anything with the four contraction capabilities + metadata."""
+
+    meta: SubstrateMeta
+
+    def scalar(self, a: Array, b: Array) -> Array: ...
+
+    def dot_int8(self, a8: Array, b8: Array) -> Array: ...
+
+    def dot(self, x: Array, w: Array) -> Array: ...
+
+    def conv2d(self, imgs: Array, kernel: Array) -> Array: ...
+
+
+# ---------------------------------------------------------------------------
+# Shared contraction machinery
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _stat_tables(mult_name: str) -> tuple[np.ndarray, np.ndarray, float]:
+    """Separable error model (r[a], c[b], µ) from the error LUT."""
+    e = lut_lib.error_lut(mult_name).astype(np.float64)
+    mu = e.mean()
+    r = e.mean(axis=1) - 0.5 * mu
+    c = e.mean(axis=0) - 0.5 * mu
+    return r.astype(np.float32), c.astype(np.float32), float(mu)
+
+
+def _bitexact_contract(a8: Array, b8: Array, product_fn) -> Array:
+    """sum_k f(a[m,k], b[k,n]) with f an arbitrary int8×int8→int32 model."""
+    m, k = a8.shape
+    k2, n = b8.shape
+    assert k == k2, (a8.shape, b8.shape)
+    pad = (-k) % _K_CHUNK
+    if pad:
+        # pad with zeros, then subtract the spurious f(0,0)=192 contributions
+        a8 = jnp.pad(a8, ((0, 0), (0, pad)))
+        b8 = jnp.pad(b8, ((0, pad), (0, 0)))
+    steps = a8.shape[1] // _K_CHUNK
+    a3 = a8.reshape(m, steps, _K_CHUNK).transpose(1, 0, 2).astype(jnp.int32)
+    b3 = b8.reshape(steps, _K_CHUNK, n).astype(jnp.int32)
+
+    def body(acc, slabs):
+        a_c, b_c = slabs  # (m, ck), (ck, n)
+        prod = product_fn(a_c[:, :, None], b_c[None, :, :])  # (m, ck, n)
+        return acc + prod.sum(axis=1), None
+
+    acc0 = jnp.zeros((m, n), jnp.int32)
+    acc, _ = jax.lax.scan(body, acc0, (a3, b3))
+    if pad:
+        f00 = int(product_fn(jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32)))
+        acc = acc - f00 * pad
+    return acc
+
+
+def _exact_int_matmul(a8: Array, b8: Array) -> Array:
+    return jax.lax.dot_general(
+        a8, b8, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+
+
+class _SubstrateBase:
+    """Shared float-dot (quantization boundary) + batched-conv plumbing."""
+
+    meta: SubstrateMeta
+
+    # -- integer domain ------------------------------------------------------
+
+    def scalar(self, a: Array, b: Array) -> Array:
+        raise NotImplementedError
+
+    def dot_int8(self, a8: Array, b8: Array) -> Array:
+        raise NotImplementedError
+
+    # -- float domain (int8 quantization boundary) ---------------------------
+
+    def dot(self, x: Array, w: Array) -> Array:
+        """``x @ w`` with this substrate as the scalar-product unit.
+
+        x: (..., K) activations (any float dtype); w: (K, N) weights.
+        Activations use a per-tensor dynamic scale; weights per-output-channel.
+        Returns the result in x's dtype.
+        """
+        batch_shape = x.shape[:-1]
+        k = x.shape[-1]
+        x2 = x.reshape(-1, k)
+        qx = quant.quantize(x2, axes=None)           # per-tensor scalar scale
+        qw = quant.quantize(w, axes=(0,))            # per-output-channel (1, N)
+        acc = self.dot_int8(qx.values, qw.values)
+        out = acc.astype(jnp.float32) * (qx.scale * qw.scale)
+        return out.reshape(*batch_shape, w.shape[-1]).astype(x.dtype)
+
+    # -- convolution ---------------------------------------------------------
+
+    def conv2d(self, imgs: Array, kernel: Array) -> Array:
+        """Batched 'same' integer conv (im2col + ``dot_int8``); see nn.conv."""
+        from repro.nn import conv  # late import: conv consumes substrates
+
+        return conv.conv2d_batched(imgs, kernel, self)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"<{type(self).__name__} {self.meta.spec}>"
+
+
+# ---------------------------------------------------------------------------
+# Backends
+# ---------------------------------------------------------------------------
+
+
+def _reject_wiring(backend: str, mult_name: str | None) -> None:
+    """Exact backends take no multiplier wiring — a suffix is a confused
+    spec (e.g. ``"int8:design_du2022"`` meaning approx_*), not a no-op."""
+    if mult_name not in (None, "exact"):
+        raise ValueError(
+            f"{backend} is an exact backend and takes no multiplier wiring "
+            f"(got {mult_name!r}); use approx_bitexact/approx_lut/approx_stat "
+            "to select a wiring.")
+
+
+class ExactSubstrate(_SubstrateBase):
+    """Float reference: plain dot in the compute dtype, exact int contraction."""
+
+    def __init__(self, mult_name: str | None = None):
+        _reject_wiring("exact", mult_name)
+        self.meta = SubstrateMeta("exact", "exact", bit_exact=True,
+                                  scalar_faithful=True, preferred_backend="any",
+                                  cost_hint="mxu")
+
+    def scalar(self, a, b):
+        return mult.exact_multiply(a, b)
+
+    def dot_int8(self, a8, b8):
+        return _exact_int_matmul(jnp.asarray(a8, jnp.int8),
+                                 jnp.asarray(b8, jnp.int8))
+
+    def dot(self, x, w):
+        return jnp.dot(x, w.astype(x.dtype))
+
+
+class Int8Substrate(_SubstrateBase):
+    """Symmetric int8 quantization boundary, exact int32 matmul."""
+
+    def __init__(self, mult_name: str | None = None):
+        _reject_wiring("int8", mult_name)
+        self.meta = SubstrateMeta("int8", "exact", bit_exact=True,
+                                  scalar_faithful=True, preferred_backend="any",
+                                  cost_hint="mxu")
+
+    def scalar(self, a, b):
+        return mult.exact_multiply(a, b)
+
+    def dot_int8(self, a8, b8):
+        return _exact_int_matmul(jnp.asarray(a8, jnp.int8),
+                                 jnp.asarray(b8, jnp.int8))
+
+
+class BitexactSubstrate(_SubstrateBase):
+    """Every scalar product through the closed-form multiplier model."""
+
+    def __init__(self, mult_name: str | None = None):
+        mult_name = mult_name or "proposed"
+        if mult_name not in mult.ALL_MULTIPLIERS:
+            raise ValueError(f"unknown multiplier wiring: {mult_name!r}")
+        self._fn = mult.ALL_MULTIPLIERS[mult_name]
+        self.meta = SubstrateMeta("approx_bitexact", mult_name, bit_exact=True,
+                                  scalar_faithful=True, preferred_backend="any",
+                                  cost_hint="scalar-emulation")
+
+    def scalar(self, a, b):
+        return self._fn(a, b)
+
+    def dot_int8(self, a8, b8):
+        return _bitexact_contract(jnp.asarray(a8, jnp.int8),
+                                  jnp.asarray(b8, jnp.int8), self._fn)
+
+
+class LutSubstrate(_SubstrateBase):
+    """Gather-based contraction through the 256×256 product LUT."""
+
+    def __init__(self, mult_name: str | None = None):
+        mult_name = mult_name or "proposed"
+        if mult_name not in mult.ALL_MULTIPLIERS:
+            raise ValueError(f"unknown multiplier wiring: {mult_name!r}")
+        self.meta = SubstrateMeta("approx_lut", mult_name, bit_exact=True,
+                                  scalar_faithful=True, preferred_backend="any",
+                                  cost_hint="gather")
+
+    def _table(self) -> Array:
+        return jnp.asarray(lut_lib.build_lut(self.meta.mult_name))
+
+    def scalar(self, a, b):
+        return lut_lib.lut_multiply(a, b, self._table())
+
+    def dot_int8(self, a8, b8):
+        table = self._table()
+        return _bitexact_contract(jnp.asarray(a8, jnp.int8),
+                                  jnp.asarray(b8, jnp.int8),
+                                  lambda x, y: table[x + 128, y + 128])
+
+
+class StatSubstrate(_SubstrateBase):
+    """Exact int32 matmul + separable statistical error model.
+
+    E[e(a,b)] ≈ r[a] + c[b] − µ, where e is the multiplier's error LUT and
+    r/c its row/column means. Adds two gathers + two rank-1 terms, lowers to
+    MXU-friendly HLO, and is the deployment-scale stand-in used by the
+    multi-pod dry-runs (the Pallas kernel replaces it on real hardware).
+    Beyond-paper contribution. The correction is defined at contraction level
+    (``scalar_faithful=False``): ``dot_int8`` rounds the summed correction
+    once per output element, while ``scalar`` rounds per product.
+    """
+
+    def __init__(self, mult_name: str | None = None):
+        mult_name = mult_name or "proposed"
+        if mult_name not in mult.ALL_MULTIPLIERS:
+            raise ValueError(f"unknown multiplier wiring: {mult_name!r}")
+        self.meta = SubstrateMeta("approx_stat", mult_name, bit_exact=False,
+                                  scalar_faithful=False, preferred_backend="any",
+                                  cost_hint="mxu")
+
+    def scalar(self, a, b):
+        r, c, _mu = _stat_tables(self.meta.mult_name)
+        a = jnp.asarray(a, jnp.int32)
+        b = jnp.asarray(b, jnp.int32)
+        corr = jnp.asarray(r)[a + 128] + jnp.asarray(c)[b + 128]
+        return a * b + corr.astype(jnp.int32)
+
+    def dot_int8(self, a8, b8):
+        a8 = jnp.asarray(a8, jnp.int8)
+        b8 = jnp.asarray(b8, jnp.int8)
+        exact = _exact_int_matmul(a8, b8)
+        r, c, _mu = _stat_tables(self.meta.mult_name)
+        ra = jnp.asarray(r)[a8.astype(jnp.int32) + 128].sum(axis=1)  # (m,)
+        cb = jnp.asarray(c)[b8.astype(jnp.int32) + 128].sum(axis=0)  # (n,)
+        corr = ra[:, None] + cb[None, :]
+        return exact + corr.astype(jnp.int32)
+
+
+class PallasSubstrate(_SubstrateBase):
+    """The tiled Pallas TPU kernel (``kernels/approx_matmul``).
+
+    Bit-identical to ``approx_bitexact`` for the proposed wiring (the kernel
+    hard-codes the proposed closed form); runs in interpret mode off-TPU so
+    the same code path is testable on CPU.
+    """
+
+    def __init__(self, mult_name: str | None = None):
+        mult_name = mult_name or "proposed"
+        if mult_name != "proposed":
+            raise ValueError(
+                "approx_pallas hard-codes the proposed closed form "
+                f"(kernels/closed_form.py); got mult_name={mult_name!r}. "
+                "Use approx_lut / approx_bitexact for other wirings.")
+        self.meta = SubstrateMeta("approx_pallas", mult_name, bit_exact=True,
+                                  scalar_faithful=True, preferred_backend="tpu",
+                                  cost_hint="vpu")
+
+    def scalar(self, a, b):
+        from repro.kernels.closed_form import approx_product_i32
+
+        return approx_product_i32(a, b)
+
+    def dot_int8(self, a8, b8):
+        from repro.kernels.approx_matmul.ops import approx_matmul
+
+        return approx_matmul(jnp.asarray(a8, jnp.int32),
+                             jnp.asarray(b8, jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_FACTORIES: Dict[str, Callable[[str], ProductSubstrate]] = {}
+
+
+def register_substrate(name: str,
+                       factory: Callable[..., ProductSubstrate]) -> None:
+    """Register a backend under ``name``; factory takes a mult_name (or
+    ``None`` when the spec carried no wiring — each backend applies its own
+    default or rejects)."""
+    _FACTORIES[name] = factory
+
+
+def list_substrates() -> list[str]:
+    """Registered backend names (stable order)."""
+    return sorted(_FACTORIES)
+
+
+def parse_spec(spec: str) -> tuple[str, str]:
+    """``"backend[:mult_name]"`` → (backend, mult_name).
+
+    A missing wiring reads as ``"proposed"`` (the approx backends' default;
+    exact backends take no wiring at all).
+    """
+    name, _, suffix = str(spec).partition(":")
+    return name, suffix or "proposed"
+
+
+@functools.lru_cache(maxsize=None)
+def get_substrate(spec: str = "exact",
+                  mult_name: str | None = None) -> ProductSubstrate:
+    """Resolve a spec string to a (cached) substrate instance.
+
+    ``spec`` may carry a wiring suffix (``"approx_lut:design_du2022"``); an
+    explicit ``mult_name`` argument overrides the suffix. Backends validate
+    the wiring: approx backends default a missing one to ``"proposed"``,
+    exact backends reject any wiring outright.
+    """
+    name, _, suffix = str(spec).partition(":")
+    if name not in _FACTORIES:
+        raise ValueError(
+            f"unknown product substrate: {name!r} (known: {list_substrates()})")
+    return _FACTORIES[name](mult_name or suffix or None)
+
+
+def as_substrate(s: "str | ProductSubstrate") -> ProductSubstrate:
+    """Accept either a spec string or an already-resolved substrate."""
+    if isinstance(s, str):
+        return get_substrate(s)
+    return s
+
+
+register_substrate("exact", ExactSubstrate)
+register_substrate("int8", Int8Substrate)
+register_substrate("approx_bitexact", BitexactSubstrate)
+register_substrate("approx_lut", LutSubstrate)
+register_substrate("approx_stat", StatSubstrate)
+register_substrate("approx_pallas", PallasSubstrate)

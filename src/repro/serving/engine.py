@@ -9,6 +9,10 @@ free as requests finish and are refilled from the queue.
 For the large-scale path, the *dry-run* lowers the dedicated ``prefill``
 graph (chunked attention, full-sequence); this engine is the functional
 small-scale server used by the examples and tests.
+
+The engine accepts a ``substrate`` override (a ``repro.nn.substrate`` spec)
+so int8 / approximate-multiplier serving experiments run against the same
+bundle + params without touching the model registry.
 """
 from __future__ import annotations
 
@@ -33,7 +37,34 @@ class Request:
 
 class ServingEngine:
     def __init__(self, bundle, params, batch_size: int = 4,
-                 max_len: int = 256, seed: int = 0):
+                 max_len: int = 256, seed: int = 0, substrate=None):
+        """substrate: optional ProductSubstrate spec string (e.g. ``"int8"``,
+        ``"approx_lut:design_du2022"``) or instance overriding the bundle's
+        ``cfg.dot_mode`` — the bundle is rebuilt on the overridden config so
+        int8/approx serving experiments don't need a separate registry entry.
+        Parameters are layout-compatible across substrates (the quantization
+        boundary is dynamic), so the same ``params`` tree is served."""
+        if substrate is not None:
+            from repro.models import registry as reg
+            from repro.nn import substrate as psub
+
+            if isinstance(substrate, str):
+                spec = substrate
+            else:
+                # the model path resolves by spec string (cfg.dot_mode), so a
+                # substrate instance must be equivalent to what the registry
+                # yields for its spec — a custom subclass would be silently
+                # swapped out for the stock backend here
+                spec = substrate.meta.spec
+                stock = psub.get_substrate(spec)
+                if type(stock) is not type(substrate) or \
+                        stock.meta != substrate.meta:
+                    raise ValueError(
+                        f"substrate instance {substrate!r} does not match the "
+                        f"registered backend for {spec!r}; pass a spec string "
+                        "or register the backend first")
+            bundle = reg.build_bundle(
+                dataclasses.replace(bundle.cfg, dot_mode=spec))
         self.bundle = bundle
         self.cfg = bundle.cfg
         self.params = params

@@ -2,7 +2,10 @@
 import numpy as np
 import pytest
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+
+# property tests need hypothesis (`pip install .[test]`); degrade gracefully
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import metrics, multiplier as m
 from repro.kernels.closed_form import approx_product_i32
