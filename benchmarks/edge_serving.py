@@ -1,0 +1,88 @@
+"""Edge-detection serving sweep: throughput/latency vs {batch, timeout,
+substrate}.
+
+Drives the micro-batching ``EdgeDetectService`` with a fixed request stream
+per configuration and records throughput (img/s), p50/p95 latency, and mean
+batch occupancy. One warmup request per service triggers compilation before
+metrics are reset, so the table reflects steady-state serving.
+
+Standalone:  PYTHONPATH=src python benchmarks/edge_serving.py [--dry-run]
+             [--substrates exact,approx_lut] [--requests 32]
+Harness:     python -m benchmarks.run --only serve_edge
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.data import image_batch
+from repro.serving import EdgeDetectService
+
+# (max_batch_size, max_wait_s) flush-policy sweep
+SETTINGS = ((1, 0.0), (4, 0.002), (8, 0.002), (8, 0.010))
+
+# CPU-feasible default sweep; the full registry is reachable via --substrates
+# (approx_bitexact / approx_pallas interpret-mode are orders slower on CPU)
+DEFAULT_SUBSTRATES = ("exact", "int8", "approx_lut", "approx_stat")
+
+
+def _serve_once(spec: str, max_batch: int, max_wait_s: float,
+                imgs) -> dict:
+    svc = EdgeDetectService(spec, max_batch_size=max_batch,
+                            max_wait_s=max_wait_s)
+    try:
+        svc.detect(imgs[:1])           # warmup: compile the bucket shape
+        svc.metrics.reset()
+        svc.detect(list(imgs))
+        return svc.stats()
+    finally:
+        svc.close()
+
+
+def run(substrates=None, dry_run: bool = False, n_requests: int = 32) -> list:
+    specs = list(substrates) if substrates else list(DEFAULT_SUBSTRATES)
+    settings = SETTINGS
+    if dry_run:
+        specs, settings, n_requests = specs[:1], SETTINGS[1:2], 6
+    imgs = image_batch(n_requests, 32, 32, noise=1.5)
+
+    rows = []
+    print("\n== edge serving: throughput vs {substrate, batch, timeout} ==")
+    print(f"{'substrate':>16s} {'batch':>5s} {'wait_ms':>7s} {'img/s':>8s} "
+          f"{'p50_ms':>7s} {'p95_ms':>7s} {'occ':>5s}")
+    for spec in specs:
+        for max_batch, wait_s in settings:
+            s = _serve_once(spec, max_batch, wait_s, imgs)
+            assert s["requests_served"] == n_requests, s
+            thrpt = s["throughput_rps"]
+            us = 1e6 / thrpt if thrpt > 0 else float("inf")
+            print(f"{spec:>16s} {max_batch:>5d} {wait_s * 1e3:>7.1f} "
+                  f"{thrpt:>8.1f} {s['latency_p50_ms']:>7.2f} "
+                  f"{s['latency_p95_ms']:>7.2f} {s['mean_occupancy']:>5.2f}")
+            rows.append((
+                f"serve_edge/{spec}/b{max_batch}/w{wait_s * 1e3:g}ms", us,
+                f"thrpt={thrpt:.1f}img/s "
+                f"p50={s['latency_p50_ms']:.2f}ms "
+                f"p95={s['latency_p95_ms']:.2f}ms "
+                f"p99={s['latency_p99_ms']:.2f}ms "
+                f"occ={s['mean_occupancy']:.2f}"))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dry-run", action="store_true",
+                    help="single tiny configuration (CI wiring check)")
+    ap.add_argument("--substrates", default=None,
+                    help="CSV of substrate specs (default: CPU-feasible set)")
+    ap.add_argument("--requests", type=int, default=32)
+    args = ap.parse_args()
+    substrates = args.substrates.split(",") if args.substrates else None
+    rows = run(substrates=substrates, dry_run=args.dry_run,
+               n_requests=args.requests)
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -12,6 +12,7 @@ import sys
 import traceback
 
 from benchmarks import (
+    edge_serving,
     fig9_edge,
     fig10_tradeoff,
     kernelbench,
@@ -29,11 +30,12 @@ MODULES = {
     "fig9": fig9_edge,
     "fig10": fig10_tradeoff,
     "kernel": kernelbench,
+    "serve_edge": edge_serving,
 }
 
 
 # benches that sweep the ProductSubstrate registry (accept substrates=[...])
-_SUBSTRATE_SWEEPS = ("fig9", "kernel")
+_SUBSTRATE_SWEEPS = ("fig9", "kernel", "serve_edge")
 
 
 def main() -> None:

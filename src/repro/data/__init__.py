@@ -1,3 +1,4 @@
 """Data pipelines: synthetic LM stream + procedural images."""
-from repro.data.images import image_batch, photo_like, test_image  # noqa: F401
+from repro.data.images import (  # noqa: F401
+    image_batch, mixed_shape_batch, photo_like, test_image)
 from repro.data.synthetic import SyntheticLMStream  # noqa: F401

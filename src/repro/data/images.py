@@ -14,12 +14,15 @@ def test_image(h: int = 96, w: int = 96) -> np.ndarray:
     return img.astype(np.uint8)
 
 
-def image_batch(n: int = 8, h: int = 64, w: int = 64, seed: int = 0) -> np.ndarray:
+def image_batch(n: int = 8, h: int = 64, w: int = 64, seed: int = 0,
+                noise: float = 0.0) -> np.ndarray:
     """(n, h, w) uint8 batch of distinct procedural images.
 
     Alternates shifted geometric test cards with photo-statistics images so a
     batch exercises both hard edges and natural gradients — the batched
     edge-detection pipeline (``nn.conv.edge_detect_batched``) consumes this.
+    ``noise`` adds i.i.d. Gaussian sensor noise of that std (in pixel units)
+    to every image, for robustness sweeps of the approximate edge maps.
     """
     base = test_image(h, w)
     out = np.empty((n, h, w), np.uint8)
@@ -28,6 +31,41 @@ def image_batch(n: int = 8, h: int = 64, w: int = 64, seed: int = 0) -> np.ndarr
             out[i] = np.roll(base, (i * 3) % w, axis=1)
         else:
             out[i] = photo_like(h, w, seed=seed + i)
+    if noise > 0:
+        out = _add_noise(out, noise, seed)
+    return out
+
+
+def _add_noise(imgs: np.ndarray, std: float, seed: int) -> np.ndarray:
+    """Gaussian sensor noise of ``std`` pixel units, clipped back to uint8."""
+    r = np.random.default_rng(seed + 0x5EED)
+    noisy = imgs.astype(np.float64) + r.normal(0, std, imgs.shape)
+    return np.clip(noisy, 0, 255).astype(np.uint8)
+
+
+MIXED_SHAPES = ((48, 64), (64, 64), (33, 47), (64, 96), (96, 96), (17, 129))
+
+
+def mixed_shape_batch(n: int = 8, shapes=MIXED_SHAPES, seed: int = 0,
+                      noise: float = 0.0) -> list:
+    """List of n uint8 images cycling through heterogeneous (h, w) shapes.
+
+    The ragged counterpart of :func:`image_batch` — same alternation of
+    shifted test cards and photo-statistics images, but cycling shapes that
+    include non-multiples of common bucket granularities, so shape-bucketing
+    and padding paths (``serving.EdgeDetectService``) are exercised by a real
+    generator instead of hand-built arrays.
+    """
+    if not shapes:
+        raise ValueError("shapes must be non-empty")
+    out = []
+    for i in range(n):
+        h, w = shapes[i % len(shapes)]
+        if i % 2 == 0:
+            img = np.roll(test_image(h, w), (seed + 3 * i) % w, axis=1)
+        else:
+            img = photo_like(h, w, seed=seed + i)
+        out.append(_add_noise(img, noise, seed + i) if noise > 0 else img)
     return out
 
 

@@ -126,8 +126,15 @@ def _stat_tables(mult_name: str) -> tuple[np.ndarray, np.ndarray, float]:
     return r.astype(np.float32), c.astype(np.float32), float(mu)
 
 
-def _bitexact_contract(a8: Array, b8: Array, product_fn) -> Array:
-    """sum_k f(a[m,k], b[k,n]) with f an arbitrary int8×int8→int32 model."""
+def _bitexact_contract(a8: Array, b8: Array, product_fn,
+                       f00: int | None = None) -> Array:
+    """sum_k f(a[m,k], b[k,n]) with f an arbitrary int8×int8→int32 model.
+
+    ``f00``: the model's f(0,0) value, needed to correct k-padding. Callers
+    that know it statically pass it so the contraction stays traceable (the
+    serving path jits whole ``edge_detect_batched`` calls through here);
+    when omitted it is constant-folded out of the trace.
+    """
     m, k = a8.shape
     k2, n = b8.shape
     assert k == k2, (a8.shape, b8.shape)
@@ -148,7 +155,10 @@ def _bitexact_contract(a8: Array, b8: Array, product_fn) -> Array:
     acc0 = jnp.zeros((m, n), jnp.int32)
     acc, _ = jax.lax.scan(body, acc0, (a3, b3))
     if pad:
-        f00 = int(product_fn(jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32)))
+        if f00 is None:
+            with jax.ensure_compile_time_eval():
+                f00 = int(product_fn(jnp.zeros((), jnp.int32),
+                                     jnp.zeros((), jnp.int32)))
         acc = acc - f00 * pad
     return acc
 
@@ -262,6 +272,9 @@ class BitexactSubstrate(_SubstrateBase):
         if mult_name not in mult.ALL_MULTIPLIERS:
             raise ValueError(f"unknown multiplier wiring: {mult_name!r}")
         self._fn = mult.ALL_MULTIPLIERS[mult_name]
+        with jax.ensure_compile_time_eval():
+            self._f00 = int(self._fn(jnp.zeros((), jnp.int32),
+                                     jnp.zeros((), jnp.int32)))
         self.meta = SubstrateMeta("approx_bitexact", mult_name, bit_exact=True,
                                   scalar_faithful=True, preferred_backend="any",
                                   cost_hint="scalar-emulation")
@@ -271,7 +284,8 @@ class BitexactSubstrate(_SubstrateBase):
 
     def dot_int8(self, a8, b8):
         return _bitexact_contract(jnp.asarray(a8, jnp.int8),
-                                  jnp.asarray(b8, jnp.int8), self._fn)
+                                  jnp.asarray(b8, jnp.int8), self._fn,
+                                  f00=self._f00)
 
 
 class LutSubstrate(_SubstrateBase):
@@ -293,9 +307,11 @@ class LutSubstrate(_SubstrateBase):
 
     def dot_int8(self, a8, b8):
         table = self._table()
+        f00 = int(lut_lib.build_lut(self.meta.mult_name)[128, 128])
         return _bitexact_contract(jnp.asarray(a8, jnp.int8),
                                   jnp.asarray(b8, jnp.int8),
-                                  lambda x, y: table[x + 128, y + 128])
+                                  lambda x, y: table[x + 128, y + 128],
+                                  f00=f00)
 
 
 class StatSubstrate(_SubstrateBase):

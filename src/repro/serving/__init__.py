@@ -1,2 +1,13 @@
-"""Batched serving engine."""
-from repro.serving.engine import ServingEngine  # noqa: F401
+"""Serving subsystem: shared scheduling core + LM engine + vision service.
+
+* :mod:`repro.serving.batcher` — SlotScheduler (continuous batching) and
+  MicroBatcher (dynamic micro-batching) primitives;
+* :mod:`repro.serving.metrics` — ServingMetrics telemetry;
+* :mod:`repro.serving.engine` — batched LM ServingEngine;
+* :mod:`repro.serving.edge_service` — EdgeDetectService over the
+  ProductSubstrate registry.
+"""
+from repro.serving.batcher import MicroBatcher, SlotScheduler, Ticket  # noqa: F401
+from repro.serving.edge_service import EdgeDetectService  # noqa: F401
+from repro.serving.engine import Request, ServingEngine  # noqa: F401
+from repro.serving.metrics import ServingMetrics  # noqa: F401

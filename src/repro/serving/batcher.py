@@ -1,0 +1,297 @@
+"""Scheduling core shared by LM and vision serving.
+
+Two primitives:
+
+* :class:`SlotScheduler` — fixed-slot continuous batching (a FIFO queue
+  feeding ``n_slots`` concurrent slots, refilled as requests finish). The LM
+  :class:`~repro.serving.engine.ServingEngine` decode loop runs on this.
+* :class:`MicroBatcher` — dynamic micro-batching for one-shot requests: a
+  thread-safe queue bucketed by an arbitrary key (shape buckets for vision),
+  flushed when a bucket reaches ``max_batch_size`` or its oldest request has
+  waited ``max_wait_s``, drained by a background worker thread. The vision
+  :class:`~repro.serving.edge_service.EdgeDetectService` runs on this.
+
+Both report into the same :class:`~repro.serving.metrics.ServingMetrics`
+schema, so LM and vision serving share one scheduling + telemetry core.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+from typing import Any, Callable, Dict, Hashable, Iterable, List, Optional, Tuple
+
+from repro.serving.metrics import ServingMetrics
+
+
+# ---------------------------------------------------------------------------
+# Fixed-slot continuous batching (LM decode)
+# ---------------------------------------------------------------------------
+
+
+class SlotScheduler:
+    """FIFO queue feeding a fixed pool of batch slots.
+
+    The pattern under continuous batching: a decode step advances every
+    occupied slot by one token; finished requests release their slot, which
+    is refilled from the queue on the next step. This class owns only the
+    queue/slot bookkeeping — the engine owns per-slot model state.
+    """
+
+    def __init__(self, n_slots: int):
+        if n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1, got {n_slots}")
+        self.slots: List[Optional[Any]] = [None] * n_slots
+        self.queue: collections.deque = collections.deque()
+
+    @property
+    def n_slots(self) -> int:
+        return len(self.slots)
+
+    def submit(self, item: Any) -> None:
+        self.queue.append(item)
+
+    def extend(self, items: Iterable[Any]) -> None:
+        self.queue.extend(items)
+
+    def refill(self) -> List[Tuple[int, Any]]:
+        """Fill empty slots from the queue; returns (slot_idx, item) pairs
+        for the newly seated items."""
+        seated = []
+        for i, s in enumerate(self.slots):
+            if s is None and self.queue:
+                item = self.queue.popleft()
+                self.slots[i] = item
+                seated.append((i, item))
+        return seated
+
+    def release(self, idx: int) -> None:
+        self.slots[idx] = None
+
+    def occupied(self) -> List[Tuple[int, Any]]:
+        return [(i, s) for i, s in enumerate(self.slots) if s is not None]
+
+    @property
+    def occupancy(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    @property
+    def busy(self) -> bool:
+        """True while any slot is occupied or requests are still queued."""
+        return bool(self.queue) or any(s is not None for s in self.slots)
+
+
+# ---------------------------------------------------------------------------
+# Dynamic micro-batching (one-shot requests)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Ticket:
+    """Handle for one submitted request; ``result()`` blocks until served."""
+
+    payload: Any
+    bucket: Hashable
+    enqueued_at: float
+    _event: threading.Event = dataclasses.field(default_factory=threading.Event)
+    _value: Any = None
+    _error: Optional[BaseException] = None
+    latency_s: Optional[float] = None
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> Any:
+        if not self._event.wait(timeout):
+            raise TimeoutError("request not served within timeout")
+        if self._error is not None:
+            raise self._error
+        return self._value
+
+
+class MicroBatcher:
+    """Dynamic micro-batcher: bucketed queue + size/timeout flush policy.
+
+    process_fn(bucket_key, payloads) -> results
+        Called on the worker thread with 1..max_batch_size payloads that share
+        a bucket key; must return one result per payload, in order.
+    bucket_fn(payload) -> hashable
+        Bucket assignment (e.g. padded image shape); ``None`` puts everything
+        in one bucket. Buckets never mix inside a batch.
+    max_wait_s
+        A non-full bucket flushes once its *oldest* request has waited this
+        long; ``0`` flushes on every worker wakeup (latency-optimal).
+    """
+
+    def __init__(self, process_fn: Callable[[Hashable, List[Any]], List[Any]],
+                 *, max_batch_size: int = 8, max_wait_s: float = 2e-3,
+                 bucket_fn: Optional[Callable[[Any], Hashable]] = None,
+                 metrics: Optional[ServingMetrics] = None,
+                 clock=time.perf_counter):
+        if max_batch_size < 1:
+            raise ValueError(f"max_batch_size must be >= 1, got {max_batch_size}")
+        if max_wait_s < 0:
+            raise ValueError(f"max_wait_s must be >= 0, got {max_wait_s}")
+        self.process_fn = process_fn
+        self.max_batch_size = max_batch_size
+        self.max_wait_s = max_wait_s
+        self.bucket_fn = bucket_fn or (lambda _payload: None)
+        self.metrics = metrics or ServingMetrics()
+        self._clock = clock
+        self._cv = threading.Condition()
+        self._buckets: Dict[Hashable, collections.deque] = {}
+        self._running = False
+        self._stopped = False
+        self._thread: Optional[threading.Thread] = None
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def start(self) -> "MicroBatcher":
+        with self._cv:
+            self._stopped = False
+            if self._running:
+                return self
+            self._running = True
+        self._thread = threading.Thread(target=self._worker, daemon=True,
+                                        name="micro-batcher")
+        self._thread.start()
+        return self
+
+    def stop(self, drain: bool = True) -> None:
+        """Stop the worker; by default serve everything still queued first.
+        Further submissions raise until the batcher is start()ed again."""
+        with self._cv:
+            self._stopped = True
+            was_running = self._running
+            self._running = False
+            self._cv.notify_all()
+        if was_running:
+            assert self._thread is not None
+            self._thread.join()
+            self._thread = None
+        if drain:
+            self._drain_inline()
+
+    def __enter__(self) -> "MicroBatcher":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- submission ----------------------------------------------------------
+
+    def submit(self, payload: Any) -> Ticket:
+        t = Ticket(payload=payload, bucket=self.bucket_fn(payload),
+                   enqueued_at=self._clock())
+        with self._cv:
+            if self._stopped:
+                # a post-stop ticket would sit in the queue forever (no
+                # worker, no pending drain) — fail fast instead
+                raise RuntimeError("MicroBatcher is stopped; call start()")
+            self._buckets.setdefault(t.bucket, collections.deque()).append(t)
+            depth = sum(len(q) for q in self._buckets.values())
+            self._cv.notify_all()
+        self.metrics.record_enqueue(depth)
+        return t
+
+    def submit_many(self, payloads: Iterable[Any]) -> List[Ticket]:
+        return [self.submit(p) for p in payloads]
+
+    @property
+    def depth(self) -> int:
+        with self._cv:
+            return sum(len(q) for q in self._buckets.values())
+
+    @property
+    def running(self) -> bool:
+        with self._cv:
+            return self._running
+
+    # -- flush policy --------------------------------------------------------
+
+    def _pop_ready_locked(self, now: float, drain: bool):
+        """(bucket, tickets, reason) for the most urgent flushable bucket, or
+        None. A bucket is flushable when full, expired, or draining; among
+        flushable buckets the oldest head wins regardless of trigger, so a
+        continuously-full hot bucket cannot starve an expired one past its
+        max_wait_s."""
+        best = None
+        for key, q in self._buckets.items():
+            if not q:
+                continue
+            head = q[0].enqueued_at
+            if len(q) >= self.max_batch_size:
+                reason = "size"
+            elif now - head >= self.max_wait_s:
+                reason = "timeout"
+            elif drain:
+                reason = "drain"
+            else:
+                continue
+            if best is None or head < best[2]:
+                best = (key, reason, head)
+        if best is None:
+            return None
+        key, reason, _ = best
+        q = self._buckets[key]
+        batch = [q.popleft() for _ in range(min(self.max_batch_size, len(q)))]
+        if not q:
+            del self._buckets[key]
+        return key, batch, reason
+
+    def _next_deadline_locked(self) -> Optional[float]:
+        heads = [q[0].enqueued_at for q in self._buckets.values() if q]
+        return min(heads) + self.max_wait_s if heads else None
+
+    # -- execution -----------------------------------------------------------
+
+    def _serve(self, key: Hashable, batch: List[Ticket], reason: str) -> None:
+        self.metrics.record_batch(len(batch), reason, self.max_batch_size)
+        try:
+            results = self.process_fn(key, [t.payload for t in batch])
+            if len(results) != len(batch):
+                raise RuntimeError(
+                    f"process_fn returned {len(results)} results for "
+                    f"{len(batch)} payloads (bucket {key!r})")
+            errs = [None] * len(batch)
+        except BaseException as e:  # noqa: BLE001 - propagate to each ticket
+            results = [None] * len(batch)
+            errs = [e] * len(batch)
+        now = self._clock()
+        depth = self.depth
+        for t, r, e in zip(batch, results, errs):
+            t._value, t._error = r, e
+            t.latency_s = now - t.enqueued_at
+            self.metrics.record_done(t.latency_s, ok=e is None, depth=depth)
+            t._event.set()
+
+    def _worker(self) -> None:
+        while True:
+            with self._cv:
+                while True:
+                    if not self._running:
+                        return
+                    now = self._clock()
+                    ready = self._pop_ready_locked(now, drain=False)
+                    if ready is not None:
+                        break
+                    deadline = self._next_deadline_locked()
+                    timeout = None if deadline is None \
+                        else max(0.0, deadline - now)
+                    self._cv.wait(timeout)
+            self._serve(*ready)
+
+    def _drain_inline(self) -> None:
+        """Serve every queued ticket on the calling thread (stop/flush)."""
+        while True:
+            with self._cv:
+                ready = self._pop_ready_locked(self._clock(), drain=True)
+            if ready is None:
+                return
+            self._serve(*ready)
+
+    def flush(self) -> None:
+        """Synchronously serve everything currently queued (testing/shutdown
+        aid; safe while the worker runs — pops are mutually exclusive)."""
+        self._drain_inline()

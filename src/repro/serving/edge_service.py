@@ -1,0 +1,151 @@
+"""Edge-detection serving: dynamic micro-batching over the substrate registry.
+
+:class:`EdgeDetectService` queues single uint8 images, buckets them by padded
+shape, and drains each bucket through
+:func:`repro.nn.conv.edge_detect_batched` on any registered
+:class:`~repro.nn.substrate.ProductSubstrate` spec (``"approx_pallas"``,
+``"approx_lut:design_du2022"``, …).
+
+Bit-identity contract: a served edge map equals the direct
+``edge_detect_batched(img[None], substrate)[0]`` exactly, for every
+substrate. Padding preserves this because
+
+* images are zero-embedded at the top-left of the bucket shape, which is
+  indistinguishable (to the 'same'-convolution taps of every kept pixel)
+  from the zero border padding the direct path applies, and
+* every substrate contraction is row-independent over the im2col matrix
+  (one row per output pixel), so extra pad rows/images never perturb kept
+  pixels. Results are cropped back to the request shape.
+
+Compiled-call caching: one jitted ``edge_detect_batched`` closure per
+service (= per substrate), so JAX's jit cache keys compiles on the
+(batch, H, W) abstract shape — a per-(shape, substrate) compiled-call
+cache. The batch dimension is padded up to ``max_batch_size`` so occupancy
+changes don't retrace, and the service tracks the shape keys it has seen
+(``compiled_shapes``, ``metrics.compiled_calls``) to make the compile count
+observable.
+"""
+from __future__ import annotations
+
+from typing import Iterable, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.nn import conv
+from repro.nn import substrate as sub
+from repro.serving.batcher import MicroBatcher, Ticket
+from repro.serving.metrics import ServingMetrics
+
+
+def _ceil_to(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+class EdgeDetectService:
+    """Micro-batched Laplacian edge detection on one product substrate.
+
+    substrate:          spec string or ProductSubstrate instance.
+    max_batch_size:     flush a shape bucket at this many images.
+    max_wait_s:         flush a partial bucket once its oldest image has
+                        waited this long.
+    bucket_granularity: H and W are rounded up to this multiple to form the
+                        bucket key (1 = exact-shape buckets, no padding).
+    pad_batches:        pad the batch dim to max_batch_size before the
+                        compiled call, so occupancy changes don't retrace.
+    """
+
+    def __init__(self, substrate: "str | sub.ProductSubstrate" = "approx_bitexact",
+                 *, max_batch_size: int = 8, max_wait_s: float = 2e-3,
+                 bucket_granularity: int = 16, pad_batches: bool = True,
+                 metrics: Optional[ServingMetrics] = None, start: bool = True):
+        if bucket_granularity < 1:
+            raise ValueError(
+                f"bucket_granularity must be >= 1, got {bucket_granularity}")
+        self.substrate = sub.as_substrate(substrate)
+        self.spec = self.substrate.meta.spec
+        self.bucket_granularity = bucket_granularity
+        self.pad_batches = pad_batches
+        self.metrics = metrics or ServingMetrics()
+        self._compiled_keys = set()  # (batch, H, W) shapes traced so far
+        self._jit_fn = jax.jit(
+            lambda imgs: conv.edge_detect_batched(imgs, self.substrate))
+        self.batcher = MicroBatcher(
+            self._process, max_batch_size=max_batch_size,
+            max_wait_s=max_wait_s, bucket_fn=self._bucket,
+            metrics=self.metrics)
+        if start:
+            self.batcher.start()
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def close(self, drain: bool = True) -> None:
+        self.batcher.stop(drain=drain)
+
+    def __enter__(self) -> "EdgeDetectService":
+        self.batcher.start()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- request path --------------------------------------------------------
+
+    def _bucket(self, img: np.ndarray) -> Tuple[int, int]:
+        h, w = img.shape
+        g = self.bucket_granularity
+        return (_ceil_to(h, g), _ceil_to(w, g))
+
+    def _process(self, bucket: Tuple[int, int],
+                 imgs: List[np.ndarray]) -> List[np.ndarray]:
+        hh, ww = bucket
+        b = len(imgs)
+        bp = self.batcher.max_batch_size if self.pad_batches else b
+        batch = np.zeros((bp, hh, ww), np.uint8)
+        for i, im in enumerate(imgs):
+            h, w = im.shape
+            batch[i, :h, :w] = im
+        if batch.shape not in self._compiled_keys:
+            self._compiled_keys.add(batch.shape)
+            self.metrics.record_compile()
+        out = np.asarray(self._jit_fn(batch))
+        return [out[i, :im.shape[0], :im.shape[1]]
+                for i, im in enumerate(imgs)]
+
+    @staticmethod
+    def _check_image(img) -> np.ndarray:
+        a = np.asarray(img)
+        if a.ndim != 2 or a.dtype != np.uint8:
+            raise ValueError(
+                f"expected a single (H, W) uint8 image, got {a.dtype} "
+                f"array of shape {a.shape}")
+        return a
+
+    def submit(self, img: np.ndarray) -> Ticket:
+        """Queue one (H, W) uint8 image; returns a Ticket (``.result()``)."""
+        return self.batcher.submit(self._check_image(img))
+
+    def detect(self, imgs: "np.ndarray | Iterable[np.ndarray]",
+               timeout: Optional[float] = 60.0) -> List[np.ndarray]:
+        """Submit image(s) and block for the edge maps, preserving order.
+
+        Accepts one (H, W) image, a (B, H, W) stack, or an iterable of
+        arbitrary-shape (H, W) images (exercises the bucketing path).
+        """
+        if isinstance(imgs, np.ndarray) and imgs.ndim == 2:
+            imgs = [imgs]
+        tickets = self.batcher.submit_many(
+            self._check_image(im) for im in imgs)
+        if not self.batcher.running:
+            self.batcher.flush()
+        return [t.result(timeout=timeout) for t in tickets]
+
+    # -- introspection -------------------------------------------------------
+
+    @property
+    def compiled_shapes(self) -> Sequence[Tuple[int, int, int]]:
+        """(batch, H, W) keys the service has compiled calls for."""
+        return tuple(sorted(self._compiled_keys))
+
+    def stats(self) -> dict:
+        return self.metrics.snapshot()

@@ -3,8 +3,11 @@
 A single-process continuous-batching core: requests are padded into a fixed
 batch, prefilled token-by-token through ``decode_step`` (uniform code path —
 no separate prefill graph to keep per-request state simple), then decoded
-until EOS/max_tokens. Per-slot state lives in the model's KV caches; slots
-free as requests finish and are refilled from the queue.
+until EOS/max_tokens. Per-slot state lives in the model's KV caches; the
+queue/slot-refill bookkeeping is the shared
+:class:`~repro.serving.batcher.SlotScheduler` (the same scheduling core the
+vision micro-batcher builds on), and per-step occupancy plus per-request
+latency land in a :class:`~repro.serving.metrics.ServingMetrics`.
 
 For the large-scale path, the *dry-run* lowers the dedicated ``prefill``
 graph (chunked attention, full-sequence); this engine is the functional
@@ -17,11 +20,15 @@ bundle + params without touching the model registry.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.serving.batcher import SlotScheduler
+from repro.serving.metrics import ServingMetrics
 
 
 @dataclasses.dataclass
@@ -71,6 +78,7 @@ class ServingEngine:
         self.batch = batch_size
         self.max_len = max_len
         self.rng = np.random.default_rng(seed)
+        self.metrics = ServingMetrics()
         self._decode = jax.jit(bundle.decode_step)
         self._reset_state()
 
@@ -101,36 +109,41 @@ class ServingEngine:
 
     def generate(self, requests: List[Request]) -> List[Request]:
         """Serve a list of requests with continuous slot refill."""
-        queue = list(requests)
-        slots: List[Optional[Request]] = [None] * self.batch
-        pos = np.zeros(self.batch, np.int64)          # per-slot cache length
+        sched = SlotScheduler(self.batch)
+        t_start = {}
+        for r in requests:
+            sched.submit(r)
+            t_start[id(r)] = time.perf_counter()
+            self.metrics.record_enqueue(len(sched.queue))
 
         # NOTE: the shared cache_len is the max over slots; per-slot masking
         # is handled by feeding pad tokens for idle slots (logits ignored).
-        active_any = True
         cache_len = 0
+        served: set = set()                           # id(r) with metrics
         self._reset_state()
         cursor = np.zeros(self.batch, np.int64)       # prompt cursor
-        while active_any and cache_len < self.max_len - 1:
-            # refill empty slots
-            for i in range(self.batch):
-                if slots[i] is None and queue:
-                    slots[i] = queue.pop(0)
-                    cursor[i] = 0
-                    pos[i] = cache_len              # prompt starts here
+        while sched.busy and cache_len < self.max_len - 1:
+            for i, r in sched.refill():
+                if r.done:                           # e.g. re-submitted request
+                    sched.release(i)
+                    continue
+                cursor[i] = 0                        # prompt starts here
+            if not sched.occupancy:
+                continue                             # nothing seated this step
             tokens = np.zeros(self.batch, np.int64)
-            for i, r in enumerate(slots):
-                if r is None or r.done:
+            for i, r in sched.occupied():
+                if r.done:
                     continue
                 if cursor[i] < len(r.prompt):
                     tokens[i] = r.prompt[int(cursor[i])]
                 elif r.output:
                     tokens[i] = r.output[-1]
+            self.metrics.record_batch(sched.occupancy, "decode", self.batch)
             logits = self._step(tokens, cache_len)
-            temps = np.array([r.temperature if r else 0.0 for r in slots])
+            temps = np.array([r.temperature if r else 0.0 for r in sched.slots])
             nxt = self._sample(logits, temps)
-            for i, r in enumerate(slots):
-                if r is None or r.done:
+            for i, r in sched.occupied():
+                if r.done:
                     continue
                 cursor[i] += 1
                 if cursor[i] >= len(r.prompt):       # past prefill: emit
@@ -139,9 +152,15 @@ class ServingEngine:
                     if (r.eos_id is not None and tok == r.eos_id) or \
                             len(r.output) >= r.max_tokens:
                         r.done = True
-                        slots[i] = None if not queue else None
+                        sched.release(i)
+                        served.add(id(r))
+                        self.metrics.record_done(
+                            time.perf_counter() - t_start[id(r)],
+                            depth=len(sched.queue))
             cache_len += 1
-            active_any = any(r is not None and not r.done for r in slots) or bool(queue)
         for r in requests:
             r.done = True
+            if id(r) not in served:  # truncated by max_len / never seated
+                self.metrics.record_done(
+                    time.perf_counter() - t_start[id(r)], ok=False, depth=0)
         return requests

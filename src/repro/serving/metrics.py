@@ -1,0 +1,157 @@
+"""Serving telemetry: counters, latency percentiles, occupancy histogram.
+
+One :class:`ServingMetrics` instance is shared by a batcher and the service
+draining it, so every layer (enqueue, flush, compile, completion) records
+into the same snapshot. All methods are thread-safe — the batcher worker and
+submitting threads hit them concurrently.
+
+Latencies are kept in a bounded reservoir (uniform replacement past the cap)
+so a long-running service reports stable percentiles at O(1) memory.
+"""
+from __future__ import annotations
+
+import random
+import threading
+import time
+from typing import Dict, Optional
+
+_RESERVOIR_CAP = 8192
+
+
+class ServingMetrics:
+    """Counters + latency/occupancy telemetry for a serving pipeline.
+
+    Flush reasons (``batches_by_reason``):
+
+    * ``"size"``    — bucket reached ``max_batch_size``;
+    * ``"timeout"`` — oldest request exceeded ``max_wait_s``;
+    * ``"drain"``   — explicit flush/stop drained a partial bucket.
+    """
+
+    def __init__(self, clock=time.perf_counter):
+        self._lock = threading.Lock()
+        self._clock = clock
+        self._rng = random.Random(0)
+        self.reset()
+
+    def reset(self) -> None:
+        """Zero every counter and restart the throughput clock (benchmarks
+        call this after warmup so compiles don't pollute the measurement)."""
+        with self._lock:
+            self.started_at = self._clock()
+            self.requests_enqueued = 0
+            self.requests_served = 0
+            self.requests_failed = 0
+            self.batches_flushed = 0
+            self.batches_by_reason: Dict[str, int] = {}
+            self.compiled_calls = 0
+            self.queue_depth = 0
+            self.queue_depth_peak = 0
+            self.occupancy_hist: Dict[int, int] = {}   # batch size -> count
+            self._occupancy_denom = 0                  # Σ max_batch / batches
+            self._occupancy_num = 0                    # Σ actual batch sizes
+            self._latencies: list[float] = []          # seconds, reservoir
+            self._latency_count = 0
+
+    # -- recording -----------------------------------------------------------
+
+    def record_enqueue(self, depth: int) -> None:
+        with self._lock:
+            self.requests_enqueued += 1
+            self.queue_depth = depth
+            self.queue_depth_peak = max(self.queue_depth_peak, depth)
+
+    def record_batch(self, size: int, reason: str,
+                     max_batch_size: int) -> None:
+        with self._lock:
+            self.batches_flushed += 1
+            self.batches_by_reason[reason] = \
+                self.batches_by_reason.get(reason, 0) + 1
+            self.occupancy_hist[size] = self.occupancy_hist.get(size, 0) + 1
+            self._occupancy_num += size
+            self._occupancy_denom += max_batch_size
+
+    def record_done(self, latency_s: float, ok: bool = True,
+                    depth: Optional[int] = None) -> None:
+        with self._lock:
+            if ok:
+                self.requests_served += 1
+            else:
+                self.requests_failed += 1
+            if depth is not None:
+                self.queue_depth = depth
+            self._latency_count += 1
+            if len(self._latencies) < _RESERVOIR_CAP:
+                self._latencies.append(latency_s)
+            else:  # uniform reservoir replacement
+                j = self._rng.randrange(self._latency_count)
+                if j < _RESERVOIR_CAP:
+                    self._latencies[j] = latency_s
+
+    def record_compile(self) -> None:
+        with self._lock:
+            self.compiled_calls += 1
+
+    # -- derived views -------------------------------------------------------
+
+    def latency_percentile(self, p: float) -> float:
+        """p in [0, 100] → latency seconds (0.0 when nothing recorded)."""
+        with self._lock:
+            lat = sorted(self._latencies)
+        if not lat:
+            return 0.0
+        idx = min(len(lat) - 1, max(0, round(p / 100.0 * (len(lat) - 1))))
+        return lat[idx]
+
+    def throughput(self) -> float:
+        """Requests served per second of wall clock since construction."""
+        dt = self._clock() - self.started_at
+        return self.requests_served / dt if dt > 0 else 0.0
+
+    def mean_occupancy(self) -> float:
+        """Mean batch fill fraction: Σ size / Σ max_batch over flushes."""
+        with self._lock:
+            if not self._occupancy_denom:
+                return 0.0
+            return self._occupancy_num / self._occupancy_denom
+
+    def snapshot(self) -> dict:
+        """Point-in-time dict of every counter + derived stats (for logs)."""
+        with self._lock:
+            hist = dict(sorted(self.occupancy_hist.items()))
+            reasons = dict(sorted(self.batches_by_reason.items()))
+            base = {
+                "requests_enqueued": self.requests_enqueued,
+                "requests_served": self.requests_served,
+                "requests_failed": self.requests_failed,
+                "batches_flushed": self.batches_flushed,
+                "batches_by_reason": reasons,
+                "compiled_calls": self.compiled_calls,
+                "queue_depth": self.queue_depth,
+                "queue_depth_peak": self.queue_depth_peak,
+                "occupancy_hist": hist,
+            }
+        base["mean_occupancy"] = self.mean_occupancy()
+        base["throughput_rps"] = self.throughput()
+        for p in (50, 95, 99):
+            base[f"latency_p{p}_ms"] = self.latency_percentile(p) * 1e3
+        return base
+
+    def format_table(self) -> str:
+        """Human-readable multi-line summary (examples / benchmarks)."""
+        s = self.snapshot()
+        occ = " ".join(f"{k}:{v}" for k, v in s["occupancy_hist"].items()) \
+            or "-"
+        reasons = " ".join(f"{k}:{v}" for k, v in s["batches_by_reason"].items()) \
+            or "-"
+        return "\n".join([
+            f"requests   in={s['requests_enqueued']} "
+            f"served={s['requests_served']} failed={s['requests_failed']}",
+            f"batches    n={s['batches_flushed']} ({reasons}) "
+            f"occupancy={s['mean_occupancy']:.2f} [{occ}]",
+            f"queue      depth={s['queue_depth']} peak={s['queue_depth_peak']}",
+            f"latency    p50={s['latency_p50_ms']:.2f}ms "
+            f"p95={s['latency_p95_ms']:.2f}ms p99={s['latency_p99_ms']:.2f}ms",
+            f"throughput {s['throughput_rps']:.1f} req/s "
+            f"(compiled_calls={s['compiled_calls']})",
+        ])

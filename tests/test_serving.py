@@ -1,0 +1,388 @@
+"""Serving subsystem: scheduling primitives, telemetry, the micro-batched
+edge-detection service (bit-identical to ``edge_detect_batched`` on every
+registered substrate), and the LM engine on the shared SlotScheduler."""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import image_batch, mixed_shape_batch
+from repro.models import registry as reg
+from repro.nn import conv
+from repro.nn import substrate as sub
+from repro.serving import (EdgeDetectService, MicroBatcher, Request,
+                           ServingEngine, ServingMetrics, SlotScheduler)
+from tests.test_models_smoke import reduced
+from tests.test_substrates import _tiny_cfg
+
+
+# ---------------------------------------------------------------------------
+# SlotScheduler (shared LM/vision scheduling core)
+# ---------------------------------------------------------------------------
+
+
+def test_slot_scheduler_refill_release_cycle():
+    s = SlotScheduler(2)
+    s.extend(["a", "b", "c"])
+    assert s.refill() == [(0, "a"), (1, "b")]
+    assert s.occupancy == 2 and s.busy and s.refill() == []
+    s.release(0)
+    assert s.refill() == [(0, "c")]
+    assert [i for i, _ in s.occupied()] == [0, 1]
+    s.release(0)
+    s.release(1)
+    assert not s.busy and s.occupancy == 0
+
+
+def test_slot_scheduler_rejects_zero_slots():
+    with pytest.raises(ValueError, match="n_slots"):
+        SlotScheduler(0)
+
+
+# ---------------------------------------------------------------------------
+# MicroBatcher flush policy
+# ---------------------------------------------------------------------------
+
+
+def _echo_batcher(calls, **kw):
+    def process(bucket, payloads):
+        calls.append((bucket, list(payloads)))
+        return [p * 10 for p in payloads]
+    return MicroBatcher(process, **kw)
+
+
+def test_flush_on_size_before_timeout():
+    """A full bucket flushes immediately even with a huge max_wait."""
+    calls = []
+    with _echo_batcher(calls, max_batch_size=3, max_wait_s=60.0) as b:
+        tickets = b.submit_many([1, 2, 3])
+        assert [t.result(timeout=10.0) for t in tickets] == [10, 20, 30]
+    assert calls == [(None, [1, 2, 3])]
+    assert b.metrics.batches_by_reason == {"size": 1}
+    assert b.metrics.occupancy_hist == {3: 1}
+
+
+def test_flush_on_timeout_partial_batch():
+    """A partial bucket flushes once its oldest request expires."""
+    calls = []
+    with _echo_batcher(calls, max_batch_size=8, max_wait_s=0.02) as b:
+        tickets = b.submit_many([1, 2])
+        assert [t.result(timeout=10.0) for t in tickets] == [10, 20]
+    assert calls == [(None, [1, 2])]
+    assert b.metrics.batches_by_reason == {"timeout": 1}
+    assert b.metrics.occupancy_hist == {2: 1}
+    # both waited out most of max_wait_s (second enqueued µs after the first)
+    assert all(t.latency_s >= 0.015 for t in tickets)
+
+
+def test_bucket_isolation_and_sync_flush():
+    """Buckets never mix inside a batch; flush() drains without a worker."""
+    calls = []
+    b = _echo_batcher(calls, max_batch_size=2, max_wait_s=60.0,
+                      bucket_fn=lambda p: p % 2)
+    tickets = b.submit_many([0, 1, 2, 3, 4])   # evens bucket 0, odds bucket 1
+    assert b.depth == 5
+    b.flush()
+    assert [t.result(timeout=0) for t in tickets] == [0, 10, 20, 30, 40]
+    for bucket, payloads in calls:
+        assert {p % 2 for p in payloads} == {bucket}
+    sizes = sorted(len(p) for _, p in calls)
+    assert sizes == [1, 2, 2] and b.depth == 0
+    assert b.metrics.batches_by_reason["size"] == 2   # two full pairs
+    assert b.metrics.batches_by_reason["drain"] == 1  # the odd one out
+
+
+def test_stop_drains_queue():
+    calls = []
+    b = _echo_batcher(calls, max_batch_size=8, max_wait_s=60.0).start()
+    t = b.submit(7)
+    b.stop(drain=True)
+    assert t.result(timeout=0) == 70
+    assert b.metrics.batches_by_reason == {"drain": 1}
+
+
+def test_expired_bucket_not_starved_by_full_bucket():
+    """Oldest flushable head wins: a continuously-full hot bucket must not
+    preempt another bucket whose head has exceeded max_wait_s."""
+    t = [0.0]
+    calls = []
+    b = MicroBatcher(lambda k, ps: [p for p in ps], max_batch_size=2,
+                     max_wait_s=0.01, bucket_fn=lambda p: p[0],
+                     clock=lambda: t[0])
+    b.submit(("cold", 0))
+    t[0] = 0.02                                   # cold head now expired
+    b.submit(("hot", 1))
+    b.submit(("hot", 2))                          # hot bucket is full
+    ready = b._pop_ready_locked(t[0], drain=False)
+    assert ready is not None
+    key, batch, reason = ready
+    assert key == "cold" and reason == "timeout" and len(batch) == 1
+
+
+def test_submit_after_stop_raises():
+    """A post-stop ticket would never be served — submit must fail fast."""
+    b = _echo_batcher([], max_batch_size=2, max_wait_s=60.0).start()
+    b.stop()
+    with pytest.raises(RuntimeError, match="stopped"):
+        b.submit(1)
+    # restartable: start() clears the stopped state
+    t = b.start().submit(2)
+    b.stop(drain=True)
+    assert t.result(timeout=0) == 20
+
+
+def test_process_error_propagates_to_every_ticket():
+    def boom(bucket, payloads):
+        raise RuntimeError("kernel exploded")
+    b = MicroBatcher(boom, max_batch_size=2, max_wait_s=60.0)
+    tickets = b.submit_many([1, 2])
+    b.flush()
+    for t in tickets:
+        with pytest.raises(RuntimeError, match="kernel exploded"):
+            t.result(timeout=0)
+    assert b.metrics.requests_failed == 2 and b.metrics.requests_served == 0
+
+
+def test_concurrent_submitters_all_served():
+    results = {}
+    with _echo_batcher([], max_batch_size=4, max_wait_s=0.001) as b:
+        def client(i):
+            results[i] = b.submit(i).result(timeout=10.0)
+        threads = [threading.Thread(target=client, args=(i,))
+                   for i in range(16)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    assert results == {i: i * 10 for i in range(16)}
+    assert b.metrics.requests_served == 16
+
+
+# ---------------------------------------------------------------------------
+# ServingMetrics
+# ---------------------------------------------------------------------------
+
+
+def test_metrics_counters_and_percentiles():
+    m = ServingMetrics()
+    for d in (3, 5, 2):
+        m.record_enqueue(d)
+    m.record_batch(3, "size", 4)
+    m.record_batch(1, "timeout", 4)
+    for lat in np.linspace(0.001, 0.1, 100):
+        m.record_done(float(lat), depth=0)
+    s = m.snapshot()
+    assert s["requests_enqueued"] == 3 and s["requests_served"] == 100
+    assert s["queue_depth_peak"] == 5 and s["queue_depth"] == 0
+    assert s["batches_by_reason"] == {"size": 1, "timeout": 1}
+    assert s["occupancy_hist"] == {1: 1, 3: 1}
+    assert s["mean_occupancy"] == pytest.approx(0.5)
+    assert s["latency_p50_ms"] == pytest.approx(50.5, rel=0.03)
+    assert s["latency_p99_ms"] == pytest.approx(99.0, rel=0.03)
+    assert s["latency_p95_ms"] <= s["latency_p99_ms"]
+    assert m.throughput() > 0
+    assert "p50=" in m.format_table()
+
+
+def test_metrics_reset_zeroes_everything():
+    m = ServingMetrics()
+    m.record_enqueue(1)
+    m.record_batch(2, "size", 2)
+    m.record_done(0.5)
+    m.reset()
+    s = m.snapshot()
+    assert s["requests_enqueued"] == 0 and s["batches_flushed"] == 0
+    assert s["latency_p50_ms"] == 0.0 and s["occupancy_hist"] == {}
+
+
+# ---------------------------------------------------------------------------
+# EdgeDetectService: bit-identical to direct edge_detect_batched
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("spec", sorted(sub.list_substrates()))
+def test_edge_service_bit_identical_per_substrate(spec):
+    """Mixed-shape requests through bucketing/padding == direct pipeline."""
+    imgs = mixed_shape_batch(5, shapes=((8, 8), (12, 10), (16, 16)), seed=2)
+    svc = EdgeDetectService(spec, max_batch_size=2, max_wait_s=1e-3,
+                            bucket_granularity=8)
+    try:
+        outs = svc.detect(imgs)
+    finally:
+        svc.close()
+    for im, out in zip(imgs, outs):
+        ref = np.asarray(conv.edge_detect_batched(im[None], spec))[0]
+        assert out.shape == im.shape and out.dtype == np.uint8
+        np.testing.assert_array_equal(out, ref, err_msg=f"{spec} {im.shape}")
+    assert svc.metrics.requests_served == len(imgs)
+
+
+def test_edge_service_shape_bucket_isolation():
+    """Images of different bucket shapes never share a flush."""
+    svc = EdgeDetectService("exact", max_batch_size=8, max_wait_s=60.0,
+                            bucket_granularity=8, start=False)
+    svc.batcher.submit_many(mixed_shape_batch(
+        6, shapes=((8, 8), (16, 16), (8, 8), (16, 16), (8, 8), (16, 16))))
+    svc.batcher.flush()
+    svc.close()
+    # two buckets → two drain flushes of 3, despite room for 8
+    assert svc.metrics.batches_flushed == 2
+    assert svc.metrics.occupancy_hist == {3: 2}
+    assert set(svc.compiled_shapes) == {(8, 8, 8), (8, 16, 16)}
+
+
+def test_edge_service_flush_on_size_vs_timeout():
+    svc = EdgeDetectService("exact", max_batch_size=2, max_wait_s=0.02)
+    try:
+        outs = svc.detect(image_batch(5, 16, 16))   # 2+2 size, 1 timeout
+    finally:
+        svc.close()
+    assert len(outs) == 5
+    reasons = svc.metrics.batches_by_reason
+    assert reasons.get("size", 0) == 2
+    assert reasons.get("timeout", 0) + reasons.get("drain", 0) == 1
+
+
+def test_edge_service_compiled_call_cache_stable():
+    """Same bucket shape served twice compiles once (batch-dim padding)."""
+    svc = EdgeDetectService("exact", max_batch_size=4, max_wait_s=1e-3)
+    try:
+        svc.detect(image_batch(3, 16, 16))          # partial batch
+        svc.detect(image_batch(4, 16, 16))          # full batch, same bucket
+    finally:
+        svc.close()
+    assert svc.metrics.compiled_calls == 1
+    assert svc.compiled_shapes == ((4, 16, 16),)
+
+
+def test_edge_service_noise_and_uint8_roundtrip():
+    imgs = image_batch(4, 16, 16, noise=8.0)
+    assert imgs.dtype == np.uint8
+    assert not np.array_equal(imgs, image_batch(4, 16, 16))
+    svc = EdgeDetectService("approx_lut", max_batch_size=4, max_wait_s=1e-3)
+    try:
+        outs = svc.detect(imgs)
+    finally:
+        svc.close()
+    ref = np.asarray(conv.edge_detect_batched(imgs, "approx_lut"))
+    np.testing.assert_array_equal(np.stack(outs), ref)
+
+
+def test_edge_service_rejects_bad_inputs():
+    svc = EdgeDetectService("exact", start=False)
+    with pytest.raises(ValueError, match="uint8"):
+        svc.submit(np.zeros((4, 4), np.float32))
+    with pytest.raises(ValueError, match="single"):
+        svc.submit(np.zeros((2, 4, 4), np.uint8))
+    with pytest.raises(ValueError, match="bucket_granularity"):
+        EdgeDetectService("exact", bucket_granularity=0)
+
+
+def test_mixed_shape_batch_generator():
+    imgs = mixed_shape_batch(7, seed=1, noise=3.0)
+    assert len(imgs) == 7
+    assert len({im.shape for im in imgs}) > 1
+    assert all(im.dtype == np.uint8 and im.ndim == 2 for im in imgs)
+    with pytest.raises(ValueError, match="non-empty"):
+        mixed_shape_batch(2, shapes=())
+
+
+# ---------------------------------------------------------------------------
+# LM ServingEngine (on the shared SlotScheduler)
+# ---------------------------------------------------------------------------
+
+
+def _lm_bundle(seed=0):
+    cfg = reduced("minitron-8b", n_layers=1, d_model=32, d_ff=64, vocab=64,
+                  n_heads=2, n_kv_heads=2)
+    bundle = reg._BUILDERS[cfg.family](cfg)
+    return bundle, bundle.init_params(jax.random.PRNGKey(seed))
+
+
+def test_serving_engine_generates():
+    bundle, params = _lm_bundle()
+    eng = ServingEngine(bundle, params, batch_size=2, max_len=64)
+    reqs = [Request(prompt=[1, 2, 3], max_tokens=5),
+            Request(prompt=[4, 5], max_tokens=4, temperature=0.7)]
+    out = eng.generate(reqs)
+    assert len(out[0].output) == 5 and len(out[1].output) == 4
+    assert all(0 <= t < 64 for t in out[0].output + out[1].output)
+    # the engine reports through the shared metrics schema
+    assert eng.metrics.requests_served == 2
+    assert eng.metrics.batches_by_reason.keys() == {"decode"}
+    assert eng.metrics.latency_percentile(50) > 0
+
+
+def test_serving_engine_redundant_generate_is_noop():
+    """Re-submitting already-done requests must not spin decode steps."""
+    bundle, params = _lm_bundle()
+    eng = ServingEngine(bundle, params, batch_size=2, max_len=64)
+    reqs = [Request(prompt=[1, 2], max_tokens=3)]
+    eng.generate(reqs)
+    steps = eng.metrics.batches_flushed
+    eng.generate(reqs)                   # all requests already done
+    assert eng.metrics.batches_flushed == steps
+
+
+def test_serving_engine_truncated_request_counts_failed():
+    """A request cut off by the max_len horizon lands in requests_failed."""
+    bundle, params = _lm_bundle()
+    eng = ServingEngine(bundle, params, batch_size=1, max_len=8)
+    out = eng.generate([Request(prompt=[1, 2, 3], max_tokens=50)])[0]
+    assert 0 < len(out.output) < 50      # truncated, not fully served
+    assert eng.metrics.requests_failed == 1
+    assert eng.metrics.requests_served == 0
+
+
+def test_serving_greedy_matches_decode_loop():
+    """Engine greedy output == manual decode_step loop (same caches)."""
+    bundle, params = _lm_bundle(seed=3)
+    prompt = [5, 9, 11]
+
+    eng = ServingEngine(bundle, params, batch_size=1, max_len=32)
+    out = eng.generate([Request(prompt=prompt, max_tokens=4)])[0].output
+
+    state = bundle.init_decode_state(1, 32)
+    toks = list(prompt)
+    outs = []
+    for i in range(len(prompt) + 3):
+        tok = toks[i] if i < len(prompt) else outs[-1]
+        batch = {"token": jnp.asarray([[tok]], jnp.int32),
+                 "cache_len": jnp.asarray(i, jnp.int32)}
+        logits, state = jax.jit(bundle.decode_step)(params, state, batch)
+        if i >= len(prompt) - 1:
+            outs.append(int(np.asarray(logits[0, 0]).argmax()))
+    assert out == outs[:4], (out, outs)
+
+
+def test_serving_engine_substrate_override():
+    bundle = reg.build_bundle(_tiny_cfg())
+    assert bundle.cfg.dot_mode == "exact"
+    params = bundle.init_params(jax.random.PRNGKey(0))
+    eng = ServingEngine(bundle, params, batch_size=1, max_len=32,
+                        substrate="int8")
+    assert eng.cfg.dot_mode == "int8"
+    assert eng.bundle.substrate is sub.get_substrate("int8")
+    out = eng.generate([Request(prompt=[1, 2, 3], max_tokens=4)])
+    assert len(out[0].output) == 4
+    assert all(0 <= t < eng.cfg.vocab for t in out[0].output)
+
+
+def test_serving_engine_accepts_registry_instance_rejects_custom():
+    bundle = reg.build_bundle(_tiny_cfg())
+    params = bundle.init_params(jax.random.PRNGKey(0))
+    # a registry-produced instance is accepted and resolves to its spec
+    eng = ServingEngine(bundle, params, batch_size=1, max_len=16,
+                        substrate=sub.get_substrate("approx_lut"))
+    assert eng.cfg.dot_mode == "approx_lut:proposed"
+
+    # a custom (unregistered) subclass would be silently swapped out by the
+    # spec-string model path, so the engine must refuse it
+    class Custom(sub.LutSubstrate):
+        pass
+
+    with pytest.raises(ValueError, match="does not match the registered"):
+        ServingEngine(bundle, params, batch_size=1, max_len=16,
+                      substrate=Custom("proposed"))

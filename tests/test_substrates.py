@@ -173,7 +173,7 @@ def test_psnr_no_float64_warning():
 
 
 # ---------------------------------------------------------------------------
-# model / serving dispatch
+# model dispatch (serving dispatch lives in tests/test_serving.py)
 # ---------------------------------------------------------------------------
 
 
@@ -200,42 +200,6 @@ def test_model_smoke_approx_pallas_end_to_end():
     logits = bundle.prefill(params, batch)
     assert logits.shape == (2, 1, cfg.vocab)
     assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
-
-
-def test_serving_engine_substrate_override():
-    from repro.serving import ServingEngine
-    from repro.serving.engine import Request
-
-    bundle = reg.build_bundle(_tiny_cfg())
-    assert bundle.cfg.dot_mode == "exact"
-    params = bundle.init_params(jax.random.PRNGKey(0))
-    eng = ServingEngine(bundle, params, batch_size=1, max_len=32,
-                        substrate="int8")
-    assert eng.cfg.dot_mode == "int8"
-    assert eng.bundle.substrate is sub.get_substrate("int8")
-    out = eng.generate([Request(prompt=[1, 2, 3], max_tokens=4)])
-    assert len(out[0].output) == 4
-    assert all(0 <= t < eng.cfg.vocab for t in out[0].output)
-
-
-def test_serving_engine_accepts_registry_instance_rejects_custom():
-    from repro.serving import ServingEngine
-
-    bundle = reg.build_bundle(_tiny_cfg())
-    params = bundle.init_params(jax.random.PRNGKey(0))
-    # a registry-produced instance is accepted and resolves to its spec
-    eng = ServingEngine(bundle, params, batch_size=1, max_len=16,
-                        substrate=sub.get_substrate("approx_lut"))
-    assert eng.cfg.dot_mode == "approx_lut:proposed"
-
-    # a custom (unregistered) subclass would be silently swapped out by the
-    # spec-string model path, so the engine must refuse it
-    class Custom(sub.LutSubstrate):
-        pass
-
-    with pytest.raises(ValueError, match="does not match the registered"):
-        ServingEngine(bundle, params, batch_size=1, max_len=16,
-                      substrate=Custom("proposed"))
 
 
 def test_edge_detect_config_uses_parameterized_spec():
