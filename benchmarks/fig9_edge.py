@@ -25,7 +25,7 @@ from repro.nn import substrate as sub
 
 def run(substrates=None) -> list:
     rows = []
-    designs = [n for n in mult.ALL_MULTIPLIERS if n != "exact"]
+    designs = [n for n in mult.default_width_names() if n != "exact"]
     for img_name, img in (("testcard", test_image(96, 96)),
                           ("photo", photo_like(128, 128))):
         batch = img[None]
@@ -51,6 +51,20 @@ def run(substrates=None) -> list:
         us = (time.perf_counter() - t0) * 1e6
         print(f"{spec:>16s}: {us:10.0f} us/batch")
         rows.append((f"fig9/batched8/{s.meta.label}", us, "imgs=8x64x64"))
+
+    # width sweep: the proposed wiring at 4/8/16-bit operand width (the
+    # response is rescaled to the 8-bit range, so PSNR is comparable)
+    img = photo_like(128, 128)
+    ref = np.asarray(conv.edge_detect_batched(img[None], "exact"))[0]
+    print("\n== Fig 9+: operand-width sweep (proposed wiring) ==")
+    for spec in ("approx_lut:proposed@4", "approx_lut:proposed",
+                 "approx_bitexact:proposed@16"):
+        t0 = time.perf_counter()
+        out = np.asarray(conv.edge_detect_batched(img[None], spec))[0]
+        us = (time.perf_counter() - t0) * 1e6
+        p = conv.psnr(ref, out)
+        print(f"{spec:>28s} PSNR={p:6.2f} dB")
+        rows.append((f"fig9/width/{spec}", us, f"psnr={p:.2f}dB"))
 
     # Pallas laplacian_conv kernel path (interpret mode on CPU)
     from repro.kernels.laplacian_conv.ops import laplacian_conv

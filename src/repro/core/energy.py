@@ -150,36 +150,48 @@ def reduce_columns(heights: List[int]) -> tuple[int, int, float]:
     return n_fa, n_ha, float(stages)
 
 
-def _exact_heights() -> List[int]:
-    h = [0] * 16
-    for i in range(7):
-        for j in range(7):
+def _exact_heights(n: int = 8) -> List[int]:
+    s = n - 1
+    h = [0] * (2 * n)
+    for i in range(s):
+        for j in range(s):
             h[i + j] += 1
-    for i in range(7):
-        h[i + 7] += 1      # ¬(a_i b_7)
-    for j in range(7):
-        h[j + 7] += 1      # ¬(a_7 b_j)
-    h[14] += 1             # a7 b7
-    h[8] += 1              # BW const
-    h[15] += 1             # BW const
+    for i in range(s):
+        h[i + s] += 1      # ¬(a_i b_{n-1})
+    for j in range(s):
+        h[j + s] += 1      # ¬(a_{n-1} b_j)
+    h[2 * s] += 1          # a_{n-1} b_{n-1}
+    h[n] += 1              # BW const
+    h[2 * n - 1] += 1      # BW const
     return h
 
 
-def _framework_heights(four_input: bool) -> List[int]:
+def _framework_heights(four_input: bool, n: int = 8) -> List[int]:
     """Truncated-framework heights after the three CSP compressors fire.
 
-    Wiring per multiplier.py: col 7 hosts C1a (4-input slot, +1=comp) and
-    C1b (3-input slot, +1=converted ¬(a7·b0)); col 8 hosts C3 (4-input slot,
-    +1=BW const).
+    Wiring per multiplier.py: col n-1 hosts C1a (4-input slot, +1=comp) and
+    C1b (3-input slot, +1=converted ¬(a_{n-1}·b_0)); col n hosts C3
+    (4-input slot, +1=BW const). Tap counts per slot come from the
+    width-n slot assignment (narrow widths feed fewer bits).
     """
-    h = _exact_heights()
-    for q in range(7):
+    from repro.core.multiplier import _csp_slot_taps, compensation_constant
+
+    h = _exact_heights(n)
+    for q in range(n - 1):
         h[q] = 0
-    h[6] += 1                          # compensation 2^6 (free output bit)
-    eat = 4 if four_input else 3
-    h[7] = h[7] - 1 - eat - 3 + 2      # conversion + C1a + C1b, 2 sums back
-    h[8] = h[8] - 1 - eat + 1 + 2      # C3 (+BW const), sum + 2 carries in
-    h[9] += 1                          # carry of C3
+    # compensation bits below 2^(n-1) drive output columns directly (the
+    # 2^(n-1) bit is the C1a "+1"); none exist for n < 6
+    rest = max(compensation_constant(n) - (1 << (n - 1)), 0)
+    for q in range(rest.bit_length()):  # bits reach col n+1 for wide n
+        if (rest >> q) & 1:
+            h[q] += 1
+    t1a, t1b, t3 = _csp_slot_taps(n)
+    eat1a = 1 + min(len(t1a), (4 if four_input else 3) - 1)  # neg + taps fed
+    eat1b = min(len(t1b), 3)
+    eat3 = 1 + min(len(t3), (4 if four_input else 3) - 1)
+    h[n - 1] = h[n - 1] - 1 - eat1a - eat1b + 2  # conversion + C1a + C1b, 2 sums back
+    h[n] = h[n] - 1 - eat3 + 1 + 2               # C3 (+BW const), sum + 2 carries in
+    h[n + 1] += 1                                # carry of C3
     return [max(0, x) for x in h]
 
 
@@ -193,36 +205,44 @@ class CostBreakdown:
     delay_units: float
 
 
-def multiplier_cost(design: str) -> CostBreakdown:
+def multiplier_cost(design: str, n: int = 8) -> CostBreakdown:
+    """Unit-gate cost of a design instantiated at operand width n.
+
+    Descriptors are calibrated at n=8 (the paper's width); at other widths
+    the partial-product array, reduction tree, and CPA scale with n while
+    the three CSP compressors stay fixed-size — the cross-width numbers are
+    unit-gate extrapolations for the error-vs-energy sweeps, not synthesis.
+    """
     d = DESIGNS[design]
+    s = n - 1
     area = energy = 0.0
 
-    # partial-product gates
-    n_pp_and, n_pp_nand = 50, 14
+    # partial-product gates: (n-1)^2 + 1 ANDs, 2(n-1) NANDs
+    n_pp_and, n_pp_nand = s * s + 1, 2 * s
     if d.lsp == "truncate":
-        n_pp_and -= 28
+        n_pp_and -= n * s // 2   # LSP columns 0..n-2 dropped
         n_pp_nand -= 1           # one NAND converted to a constant
     a, e = _block_cost({"and2": n_pp_and, "nand2": n_pp_nand})
     area += a
     energy += e
 
-    # CSP / sign-handling compressors
+    # CSP / sign-handling compressors (three slots at every width)
     a, e = _block_cost(d.csp_gates)
     area += a
     energy += e
 
     # reduction tree
     if d.lsp == "truncate":
-        heights = _framework_heights(design in _FOUR_INPUT)
+        heights = _framework_heights(design in _FOUR_INPUT, n)
     else:
-        heights = _exact_heights()
+        heights = _exact_heights(n)
         if d.lsp == "approx":
             # LSP columns reduced by cheap approximate cells instead of FAs
-            lsp_bits = sum(heights[:7])
+            lsp_bits = sum(heights[:s])
             a, e = _block_cost({k: v * (lsp_bits / 3) for k, v in d.approx_lsp_cell.items()})
             area += a
             energy += e
-            for q in range(7):
+            for q in range(s):
                 heights[q] = min(heights[q], 2)
     n_fa, n_ha, stages = reduce_columns(heights)
     fa_area, fa_energy = _block_cost(d.tree_fa)
@@ -230,8 +250,9 @@ def multiplier_cost(design: str) -> CostBreakdown:
     area += n_fa * fa_area + n_ha * ha_area
     energy += n_fa * fa_energy + n_ha * ha_energy
 
-    # final carry-propagate adder
-    a, e = _block_cost({k: v * d.cpa_bits for k, v in FULL_ADDER.items()})
+    # final carry-propagate adder (descriptor bits are for n=8; scale with n)
+    cpa_bits = max(2, round(d.cpa_bits * n / 8))
+    a, e = _block_cost({k: v * cpa_bits for k, v in FULL_ADDER.items()})
     area += a
     energy += e
 
@@ -240,7 +261,7 @@ def multiplier_cost(design: str) -> CostBreakdown:
 
     t_fa = GATES["xor2"][1] * (2 if d.tree_fa is FULL_ADDER else 1.6)
     t_cpa = GATES["and2"][1] + GATES["or2"][1]
-    delay = GATES["and2"][1] + d.extra_stage_delay + stages * t_fa + d.cpa_bits * t_cpa
+    delay = GATES["and2"][1] + d.extra_stage_delay + stages * t_fa + cpa_bits * t_cpa
     return CostBreakdown(area, energy, delay)
 
 
@@ -259,13 +280,17 @@ PAPER_TABLE5 = {
 }
 
 
-def estimate(design: str) -> Dict[str, float]:
-    """Predicted area (µm²), power (µW), delay (ns), PDP (fJ) for a design."""
+def estimate(design: str, n: int = 8) -> Dict[str, float]:
+    """Predicted area (µm²), power (µW), delay (ns), PDP (fJ) for a design.
+
+    Scale factors are calibrated on the exact 8-bit row of Table 5 at every
+    width, so cross-width numbers share one unit→physical mapping.
+    """
     ref = multiplier_cost("exact")
     s_area = _PAPER_EXACT["area"] / ref.area_units
     s_delay = _PAPER_EXACT["delay"] / ref.delay_units
     s_power = _PAPER_EXACT["power"] / ref.energy_units
-    c = multiplier_cost(design)
+    c = multiplier_cost(design, n)
     area = c.area_units * s_area
     delay = c.delay_units * s_delay
     power = c.energy_units * s_power

@@ -1,9 +1,11 @@
 """Error metrics for approximate multipliers (paper §5.1, Eq. 7–8).
 
-All metrics are computed *exhaustively* over the full 8-bit signed operand
-space (65 536 pairs) unless a subset is passed. MRED excludes pairs whose
-exact product is zero (relative error undefined there); the exclusion is
-511/65536 pairs and is the standard convention.
+All metrics are computed *exhaustively* over the full n-bit signed operand
+space (65 536 pairs at the default n=8) via :func:`evaluate`; widths whose
+grid is not enumerable (n > MAX_EXHAUSTIVE_BITS) use :func:`evaluate_sampled`
+on a seeded uniform operand sample. MRED excludes pairs whose exact product
+is zero (relative error undefined there); the exclusion is 511/65536 pairs
+at n=8 and is the standard convention.
 """
 from __future__ import annotations
 
@@ -35,12 +37,29 @@ class ErrorReport:
         )
 
 
+MAX_EXHAUSTIVE_BITS = 12  # 2^(2n) pairs; beyond this use evaluate_sampled
+
+
 def operand_grid(n_bits: int = 8) -> tuple[Array, Array]:
-    """All (a, b) signed pairs as flat arrays."""
+    """All (a, b) signed pairs as flat arrays (n_bits ≤ MAX_EXHAUSTIVE_BITS)."""
+    if n_bits > MAX_EXHAUSTIVE_BITS:
+        raise ValueError(
+            f"exhaustive grid at n={n_bits} has 2^{2 * n_bits} pairs; "
+            "use sample_operands/evaluate_sampled for wide operands")
     lo, hi = -(1 << (n_bits - 1)), (1 << (n_bits - 1))
     v = jnp.arange(lo, hi, dtype=jnp.int32)
     a, b = jnp.meshgrid(v, v, indexing="ij")
     return a.reshape(-1), b.reshape(-1)
+
+
+def sample_operands(n_bits: int = 16, n_samples: int = 1 << 16,
+                    seed: int = 0) -> tuple[Array, Array]:
+    """Seeded uniform (a, b) operand sample for non-enumerable widths."""
+    rng = np.random.default_rng(seed)
+    lo, hi = -(1 << (n_bits - 1)), (1 << (n_bits - 1))
+    a = rng.integers(lo, hi, n_samples, dtype=np.int64).astype(np.int32)
+    b = rng.integers(lo, hi, n_samples, dtype=np.int64).astype(np.int32)
+    return jnp.asarray(a), jnp.asarray(b)
 
 
 @jax.jit
@@ -48,17 +67,13 @@ def _exact_products(a: Array, b: Array) -> Array:
     return a * b
 
 
-def evaluate(mult_fn: MultFn, name: str = "", n_bits: int = 8) -> ErrorReport:
-    """Exhaustive ER / MED / NMED / MRED for an 8×8 multiplier model."""
-    a, b = operand_grid(n_bits)
-    exact = np.asarray(_exact_products(a, b), dtype=np.int64)
-    approx = np.asarray(jax.jit(mult_fn)(a, b), dtype=np.int64)
+def _report(name: str, exact: np.ndarray, approx: np.ndarray) -> ErrorReport:
     err = approx - exact
     abs_err = np.abs(err)
     nz = exact != 0
     max_exact = np.abs(exact).max()
     return ErrorReport(
-        name=name or getattr(mult_fn, "__name__", "multiplier"),
+        name=name,
         er=float((err != 0).mean()),
         med=float(abs_err.mean()),
         nmed=float(abs_err.mean() / max_exact),
@@ -66,6 +81,25 @@ def evaluate(mult_fn: MultFn, name: str = "", n_bits: int = 8) -> ErrorReport:
         max_ed=int(abs_err.max()),
         mean_err=float(err.mean()),
     )
+
+
+def evaluate(mult_fn: MultFn, name: str = "", n_bits: int = 8) -> ErrorReport:
+    """Exhaustive ER / MED / NMED / MRED for an n×n multiplier model."""
+    a, b = operand_grid(n_bits)
+    exact = np.asarray(_exact_products(a, b), dtype=np.int64)
+    approx = np.asarray(jax.jit(mult_fn)(a, b), dtype=np.int64)
+    return _report(name or getattr(mult_fn, "__name__", "multiplier"),
+                   exact, approx)
+
+
+def evaluate_sampled(mult_fn: MultFn, name: str = "", n_bits: int = 16,
+                     n_samples: int = 1 << 16, seed: int = 0) -> ErrorReport:
+    """Sampled error metrics for widths whose grid is not enumerable (n=16)."""
+    a, b = sample_operands(n_bits, n_samples, seed)
+    exact = np.asarray(_exact_products(a, b), dtype=np.int64)
+    approx = np.asarray(jax.jit(mult_fn)(a, b), dtype=np.int64)
+    return _report(name or getattr(mult_fn, "__name__", "multiplier"),
+                   exact, approx)
 
 
 def evaluate_all(mult_fns: Dict[str, MultFn], n_bits: int = 8) -> Dict[str, ErrorReport]:

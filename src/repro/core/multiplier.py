@@ -1,18 +1,37 @@
-"""Baugh-Wooley approximate signed multiplier (paper §3).
+"""Baugh-Wooley approximate signed multiplier, width-parametric (paper §3).
 
-Two independent implementations of the proposed 8×8 multiplier:
+Two independent implementations of the proposed multiplier family, both
+defined for arbitrary operand width ``n``:
 
-* :func:`approx_multiply` — the *closed form* derived in DESIGN.md §3:
+* :func:`approx_multiply_with` — the *closed form* derived in DESIGN.md §3:
   exact product + truncation removal + compensation + compressor error
   injections. This is what the Pallas kernels and the NN layers evaluate.
 * :class:`StructuralMultiplier` — an explicit PPM / reduction-tree model that
-  wires every partial-product bit through the compressors gate-by-gate.
+  wires every partial-product bit through the compressors slot-by-slot.
 
-``tests/test_multiplier.py`` asserts the two agree on all 65 536 operand
-pairs, and that the exact BW construction reproduces ``a*b`` exactly.
+``tests/test_multiplier.py`` asserts the two agree on all 65 536 8-bit pairs;
+``tests/test_widths.py`` extends the parity contract to N=4 (exhaustive) and
+N=16 (sampled).
+
+Width contract
+==============
+
+* Supported widths: ``MIN_BITS (3) <= n <= MAX_BITS (16)`` for the CSP
+  wirings; :func:`exact_baugh_wooley` additionally accepts ``n == 2``. The
+  ceiling exists because every model computes in int32 and the 2n-bit
+  product of 16-bit operands exactly fills the int32 two's-complement ring.
+* Operand range: signed n-bit two's complement, ``[-2^(n-1), 2^(n-1)-1]``.
+  Out-of-range ints are **wrapped** into that range (low n bits,
+  sign-extended) before the model is applied, so every backend — closed
+  form, structural, LUT gather — agrees on arbitrary int inputs.
+* Output: the 2n-bit two's-complement product value (wrapped via
+  :func:`wrap_to_width`; for n=16 the int32 ring *is* the 32-bit wrap).
+* Exhaustive verification: n=4 and n=8 are verified over the full operand
+  grid in tests; n=16 is verified on random samples (the 2^32 grid is not
+  enumerable in CI).
 
 CSP wiring (reconstructed; selected by exhaustive match against paper
-Table 4 — see DESIGN.md §3 and EXPERIMENTS.md):
+Table 4 — see DESIGN.md §3 and EXPERIMENTS.md). For n=8:
 
   column 7 (2^{N-1}):  6 positive pps, ¬(a0·b7), ¬(a7·b0), comp. constant
     C1a = approximate A+B+C+D+1:  A=¬(a0·b7), B,C,D = p(1,6), p(2,5), p(3,4),
@@ -24,6 +43,13 @@ Table 4 — see DESIGN.md §3 and EXPERIMENTS.md):
           "+1" = BW constant 2^8.
   Everything else (incl. ¬(a7·b1), p(5,3), p(6,2), compressor carries) is
   reduced exactly; compensation 2^6 drives output bit 6 directly.
+
+For general n the same three slots sit at columns n-1 / n-1 / n; the slot
+taps are the width-n analogues p(i, n-1-i) for i in 1..3 (C1a), 4..6 (C1b)
+and p(i, n-i) for i in 2..4 (C3), clipped to the taps that exist at that
+width (missing taps are fed as constant 0; surplus column bits are reduced
+exactly and contribute no error). See ``docs/compressors.md`` for the
+truncation/compensation math at general n.
 
 This is the unique wiring family that satisfies every prose constraint
 (three sign-focused compressors, both types used, exactly one approximate
@@ -48,16 +74,85 @@ N_BITS = 8
 OUT_BITS = 2 * N_BITS
 _MASK_OUT = (1 << OUT_BITS) - 1
 
+MIN_BITS = 3   # below this the CSP columns degenerate to nothing
+MAX_BITS = 16  # 2n-bit products must fit the int32 two's-complement ring
+
+# Convenience wiring-family aliases: ``csp_axcK`` selects the CSP framework
+# with approximate compressor design AC-K (Table 2 numbering) in its
+# sign-focused slots — the names the cross-width sweeps use.
+WIRING_ALIASES: Dict[str, str] = {
+    "csp_axc1": "design_esposito2018",
+    "csp_axc2": "design_guo2019",
+    "csp_axc3": "design_strollo2020",
+    "csp_axc4": "design_du2024",
+    "csp_axc5": "design_du2022",
+    "csp_akbari": "design_akbari2017",
+    "csp_krishna": "design_krishna2024",
+}
+
+
+def _require_width(n: int) -> None:
+    if not (MIN_BITS <= n <= MAX_BITS):
+        raise ValueError(
+            f"operand width must be in [{MIN_BITS}, {MAX_BITS}] (int32 models"
+            f" cannot represent a {2 * n}-bit product ring); got n={n}")
+
+
+def split_width(key: str, default: int = N_BITS) -> tuple[str, int]:
+    """``"name[@N]"`` → (name, N). A bare name reads as the default width."""
+    base, sep, w = str(key).partition("@")
+    if not sep:
+        return base, default
+    try:
+        n = int(w)
+    except ValueError:
+        raise ValueError(f"bad width suffix in multiplier key {key!r}") from None
+    _require_width(n)
+    return base, n
+
+
+def canonical_key(key: str) -> str:
+    """Resolve aliases and normalize the width suffix (``@8`` is implicit)."""
+    base, n = split_width(key)
+    base = WIRING_ALIASES.get(base, base)
+    if base != "exact" and base not in WIRINGS:
+        raise ValueError(f"unknown multiplier wiring: {base!r}")
+    return base if n == N_BITS else f"{base}@{n}"
+
 
 def _bit(x: Array, i: int) -> Array:
     """i-th bit of the two's-complement representation (int32 0/1)."""
     return (jnp.asarray(x, jnp.int32) >> i) & 1
 
 
+def _const32(v: int) -> int:
+    """Python constant → int32-representable value (mod 2^32); needed for
+    the 2^31 Baugh-Wooley constant at n=16."""
+    v &= (1 << 32) - 1
+    return v - (1 << 32) if v >= (1 << 31) else v
+
+
+def wrap_to_width(x: Array, out_bits: int) -> Array:
+    """Reduce an int32 value to ``out_bits``-bit two's complement (int32).
+
+    For ``out_bits >= 32`` this is the identity: int32 arithmetic already
+    wraps mod 2^32, so the 32-bit product ring of n=16 operands is free.
+    """
+    x = jnp.asarray(x, jnp.int32)
+    if out_bits >= 32:
+        return x
+    u = x & ((1 << out_bits) - 1)
+    return jnp.where(u >= (1 << (out_bits - 1)), u - (1 << out_bits), u)
+
+
 def wrap_int16(x: Array) -> Array:
     """Reduce an int32 value to 16-bit two's complement (as int32)."""
-    u = jnp.asarray(x, jnp.int32) & _MASK_OUT
-    return jnp.where(u >= (1 << (OUT_BITS - 1)), u - (1 << OUT_BITS), u)
+    return wrap_to_width(x, OUT_BITS)
+
+
+def wrap_operand(x: Array, n: int = N_BITS) -> Array:
+    """Wrap an int into the signed n-bit operand domain (low n bits)."""
+    return wrap_to_width(x, n)
 
 
 # ---------------------------------------------------------------------------
@@ -67,8 +162,8 @@ def wrap_int16(x: Array) -> Array:
 
 def exact_baugh_wooley(a: Array, b: Array, n: int = N_BITS) -> Array:
     """Exact signed product via the BW PPM (pos ANDs, NANDs, constants)."""
-    a = jnp.asarray(a, jnp.int32)
-    b = jnp.asarray(b, jnp.int32)
+    a = wrap_operand(jnp.asarray(a, jnp.int32), n)
+    b = wrap_operand(jnp.asarray(b, jnp.int32), n)
     total = jnp.zeros_like(a)
     s = n - 1
     for i in range(s):
@@ -79,15 +174,14 @@ def exact_baugh_wooley(a: Array, b: Array, n: int = N_BITS) -> Array:
     for j in range(s):  # complemented row against a's sign bit
         total = total + ((1 - (_bit(a, s) & _bit(b, j))) << (j + s))
     total = total + ((_bit(a, s) & _bit(b, s)) << (2 * s))
-    total = total + (1 << n) + (1 << (2 * n - 1))  # BW constants
-    u = total & ((1 << (2 * n)) - 1)
-    return jnp.where(u >= (1 << (2 * n - 1)), u - (1 << (2 * n)), u)
+    total = total + _const32((1 << n) + (1 << (2 * n - 1)))  # BW constants
+    return wrap_to_width(total, 2 * n)
 
 
 def truncated_sum(a: Array, b: Array, n: int = N_BITS) -> Array:
     """Arithmetic value of the truncated LSP partial products (cols 0..n-2)."""
-    a = jnp.asarray(a, jnp.int32)
-    b = jnp.asarray(b, jnp.int32)
+    a = wrap_operand(jnp.asarray(a, jnp.int32), n)
+    b = wrap_operand(jnp.asarray(b, jnp.int32), n)
     t = jnp.zeros_like(a)
     for i in range(n - 1):
         for j in range(n - 1 - i):
@@ -96,12 +190,19 @@ def truncated_sum(a: Array, b: Array, n: int = N_BITS) -> Array:
 
 
 def compensation_constant(n: int = N_BITS) -> int:
-    """Two constant 1s at weights 2^(n-1), 2^(n-2) ≈ E[T_T] (Eq. 5)."""
-    return (1 << (n - 1)) + (1 << (n - 2))
+    """Constant 1s approximating E[T_T] (Eq. 5): ``(n-2) · 2^(n-3)``.
+
+    This is exactly ``floor(E[T_T])`` at every width (the fractional part is
+    always 0.25) and reproduces the paper's two constant 1s at weights
+    2^(n-1), 2^(n-2) for n=8: 6·32 = 192 = 2^7 + 2^6. The binary expansion
+    of (n-2) says which columns carry a compensation 1.
+    """
+    _require_width(n)
+    return (n - 2) << (n - 3)
 
 
 def expected_truncation(n: int = N_BITS) -> float:
-    """E[T_T] per Eq. (5): sum_q (1/4)(q+1) 2^q."""
+    """E[T_T] per Eq. (5): sum_q (1/4)(q+1) 2^q = (n-2)·2^(n-3) + 1/4."""
     return sum(0.25 * (q + 1) * 2**q for q in range(n - 1))
 
 
@@ -114,11 +215,13 @@ def expected_truncation(n: int = N_BITS) -> float:
 class CSPWiring:
     """Which compressor design sits in each of the three CSP slots.
 
-    ``c1a`` (col 7, 4-input slot, +1 = compensation), ``c1b`` (col 7, 3-input
-    slot, +1 = converted ¬(a7·b0)), ``c3`` (col 8, 4-input slot, +1 = BW).
-    3-input designs may occupy the 4-input slots, consuming one fewer
-    positive pp (the leftover pp is then reduced exactly, contributing no
-    error); 4-input designs in the ``c1b`` slot are indexed with D=0.
+    ``c1a`` (col n-1, 4-input slot, +1 = compensation), ``c1b`` (col n-1,
+    3-input slot, +1 = converted ¬(a_{n-1}·b_0)), ``c3`` (col n, 4-input
+    slot, +1 = BW constant). 3-input designs may occupy the 4-input slots,
+    consuming one fewer positive pp (the leftover pp is then reduced exactly,
+    contributing no error); 4-input designs in the ``c1b`` slot are indexed
+    with D=0, as are slots whose width-n column has fewer taps than the
+    design has inputs (narrow widths).
     """
 
     name: str
@@ -127,37 +230,49 @@ class CSPWiring:
     c3: comp.Compressor
 
 
-def _slot_index(c: comp.Compressor, neg, pps):
+def _csp_slot_taps(n: int) -> tuple[list, list, list]:
+    """Positive-pp (i, j) taps feeding each CSP slot at width n.
+
+    Column n-1 holds p(i, n-1-i) for i in 1..n-2: C1a takes i ∈ {1,2,3},
+    C1b takes i ∈ {4,5,6}. Column n holds p(i, n-i) for i in 2..n-2: C3
+    takes i ∈ {2,3,4}. Taps beyond the column population (narrow n) simply
+    don't exist; taps beyond these windows (wide n) are reduced exactly.
+    """
+    c1a = [(i, n - 1 - i) for i in range(1, min(4, n - 1))]
+    c1b = [(i, n - 1 - i) for i in range(4, min(7, n - 1))]
+    c3 = [(i, n - i) for i in range(2, min(5, n - 1))]
+    return c1a, c1b, c3
+
+
+def _slot_index(c: comp.Compressor, neg, pps, zero: Array):
     """Pack the truth-table index for a compressor slot.
 
-    neg: the negative-pp input (or None for the c1b slot), pps: positive pps.
+    neg: the negative-pp input (or None for the c1b slot); pps: positive
+    pps. The bit list is truncated to the design's arity (surplus taps are
+    reduced exactly elsewhere) or zero-padded (narrow widths / 4-input
+    designs in the 3-input slot).
     """
-    if neg is not None:
-        bits = [neg] + list(pps)
-    else:
-        bits = list(pps)
-    if c.n_inputs == len(bits):
-        return comp.pack_bits(bits)
-    if c.n_inputs == len(bits) - 1:  # 3-input design in a 4-input slot
-        return comp.pack_bits(bits[:-1])
-    if c.n_inputs == len(bits) + 1:  # 4-input design in the 3-input slot
-        return comp.pack_bits(bits + [jnp.zeros_like(bits[0])])
-    raise ValueError(f"slot arity mismatch for {c.name}")
+    bits = ([neg] if neg is not None else []) + list(pps)
+    bits = bits[: c.n_inputs]
+    while len(bits) < c.n_inputs:
+        bits.append(zero)
+    return comp.pack_bits(bits)
 
 
-def _csp_errors(a: Array, b: Array, w: CSPWiring) -> tuple[Array, Array, Array]:
-    """Per-slot (approx − exact) error values e_C1a, e_C1b, e_C3."""
+def _csp_errors(a: Array, b: Array, w: CSPWiring,
+                n: int = N_BITS) -> tuple[Array, Array, Array]:
+    """Per-slot (approx − exact) error values e_C1a, e_C1b, e_C3 at width n."""
     a = jnp.asarray(a, jnp.int32)
     b = jnp.asarray(b, jnp.int32)
-    na0b7 = 1 - (_bit(a, 0) & _bit(b, 7))
-    na1b7 = 1 - (_bit(a, 1) & _bit(b, 7))
-    p16, p25, p34 = (_bit(a, 1) & _bit(b, 6), _bit(a, 2) & _bit(b, 5), _bit(a, 3) & _bit(b, 4))
-    p26, p35, p44 = (_bit(a, 2) & _bit(b, 6), _bit(a, 3) & _bit(b, 5), _bit(a, 4) & _bit(b, 4))
-    p43, p52, p61 = (_bit(a, 4) & _bit(b, 3), _bit(a, 5) & _bit(b, 2), _bit(a, 6) & _bit(b, 1))
+    zero = jnp.zeros_like(a)
+    t1a, t1b, t3 = _csp_slot_taps(n)
+    pp = lambda ij: _bit(a, ij[0]) & _bit(b, ij[1])  # noqa: E731
 
-    e1a = w.c1a.error_packed(_slot_index(w.c1a, na0b7, [p16, p25, p34]))
-    e1b = w.c1b.error_packed(_slot_index(w.c1b, None, [p43, p52, p61]))
-    e3 = w.c3.error_packed(_slot_index(w.c3, na1b7, [p26, p35, p44]))
+    neg0 = 1 - (_bit(a, 0) & _bit(b, n - 1))  # ¬(a0·b_{n-1})
+    neg1 = 1 - (_bit(a, 1) & _bit(b, n - 1))  # ¬(a1·b_{n-1})
+    e1a = w.c1a.error_packed(_slot_index(w.c1a, neg0, [pp(t) for t in t1a], zero))
+    e1b = w.c1b.error_packed(_slot_index(w.c1b, None, [pp(t) for t in t1b], zero))
+    e3 = w.c3.error_packed(_slot_index(w.c3, neg1, [pp(t) for t in t3], zero))
     return e1a, e1b, e3
 
 
@@ -166,20 +281,23 @@ def _csp_errors(a: Array, b: Array, w: CSPWiring) -> tuple[Array, Array, Array]:
 # ---------------------------------------------------------------------------
 
 
-def approx_multiply_with(a: Array, b: Array, wiring: CSPWiring) -> Array:
-    """Approximate 8×8 signed product with the given CSP compressor set.
+def approx_multiply_with(a: Array, b: Array, wiring: CSPWiring,
+                         n: int = N_BITS) -> Array:
+    """Approximate n×n signed product with the given CSP compressor set.
 
-    approx(a,b) = a·b − trunc + 2^7 + 2^6 + 2^7·(a7·b0)
-                  + 2^7·(e_C1a + e_C1b) + 2^8·e_C3       (mod 2^16)
+    approx(a,b) = a·b − trunc + comp_n + 2^{n-1}·(a_{n-1}·b_0)
+                  + 2^{n-1}·(e_C1a + e_C1b) + 2^n·e_C3       (mod 2^{2n})
     """
-    a = jnp.asarray(a, jnp.int32)
-    b = jnp.asarray(b, jnp.int32)
+    _require_width(n)
+    a = wrap_operand(jnp.asarray(a, jnp.int32), n)
+    b = wrap_operand(jnp.asarray(b, jnp.int32), n)
     exact = a * b
-    t = truncated_sum(a, b)
-    conv = _bit(a, 7) & _bit(b, 0)  # ¬(a7·b0) → constant-1 conversion
-    e1a, e1b, e3 = _csp_errors(a, b, wiring)
-    raw = exact - t + compensation_constant() + (conv << 7) + ((e1a + e1b) << 7) + (e3 << 8)
-    return wrap_int16(raw)
+    t = truncated_sum(a, b, n)
+    conv = _bit(a, n - 1) & _bit(b, 0)  # ¬(a_{n-1}·b_0) → constant-1 conversion
+    e1a, e1b, e3 = _csp_errors(a, b, wiring, n)
+    raw = (exact - t + compensation_constant(n) + (conv << (n - 1))
+           + ((e1a + e1b) << (n - 1)) + (e3 << n))
+    return wrap_to_width(raw, 2 * n)
 
 
 PROPOSED_WIRING = CSPWiring("proposed", comp.PROPOSED4, comp.EXACT3, comp.EXACT4)
@@ -187,12 +305,12 @@ EXACT_CSP_WIRING = CSPWiring("trunc_exact_csp", comp.EXACT4, comp.EXACT3, comp.E
 
 
 def approx_multiply(a: Array, b: Array) -> Array:
-    """The paper's proposed approximate signed multiplier (closed form)."""
+    """The paper's proposed approximate signed multiplier (8-bit closed form)."""
     return approx_multiply_with(a, b, PROPOSED_WIRING)
 
 
 def exact_multiply(a: Array, b: Array) -> Array:
-    """Exact signed product (reference)."""
+    """Exact signed product (reference; width-agnostic)."""
     return jnp.asarray(a, jnp.int32) * jnp.asarray(b, jnp.int32)
 
 
@@ -218,15 +336,66 @@ BASELINE_WIRINGS: Dict[str, CSPWiring] = {
                                     comp.EXACT3, comp.EXACT4),
 }
 
+# Every named CSP wiring (the proposed design, the all-exact ablation, and
+# the literature baselines). Aliases in WIRING_ALIASES resolve onto these.
+WIRINGS: Dict[str, CSPWiring] = {
+    "proposed": PROPOSED_WIRING,
+    "trunc_exact_csp": EXACT_CSP_WIRING,
+    **BASELINE_WIRINGS,
+}
+
+
+def get_wiring(name: str) -> CSPWiring:
+    """Resolve a wiring name (or ``csp_*`` alias) to its CSPWiring."""
+    name = WIRING_ALIASES.get(name, name)
+    try:
+        return WIRINGS[name]
+    except KeyError:
+        raise ValueError(f"unknown multiplier wiring: {name!r}") from None
+
+
+def make_multiplier(name: str, n: int = N_BITS) -> Callable[[Array, Array], Array]:
+    """Width-n product callable for a wiring name (or ``"exact"``)."""
+    if name == "exact":
+        return exact_multiply
+    w = get_wiring(name)
+    _require_width(n)
+
+    def fn(a: Array, b: Array, _w=w, _n=n) -> Array:
+        return approx_multiply_with(a, b, _w, n=_n)
+
+    fn.__name__ = f"{name}@{n}" if n != N_BITS else name
+    return fn
+
+
+def resolve_multiplier(key: str, n: int | None = None
+                       ) -> tuple[str, Callable[[Array, Array], Array], int]:
+    """``"name[@N]"`` (+ optional explicit width) → (canonical_key, fn, N).
+
+    The canonical key resolves aliases and drops the implicit ``@8`` suffix;
+    it is the cache key for the width-indexed LUTs.
+    """
+    base, kn = split_width(key)
+    width = n if n is not None else kn
+    base = WIRING_ALIASES.get(base, base) or "proposed"
+    key_c = base if width == N_BITS else f"{base}@{width}"
+    return key_c, make_multiplier(base, width), width
+
+
+# All registered product models. Bare names are the 8-bit designs; ``@4`` /
+# ``@16`` variants instantiate the same wiring at the other verified widths.
+# ``"exact"`` is width-agnostic (plain int product).
 ALL_MULTIPLIERS: Dict[str, Callable[[Array, Array], Array]] = {
     "exact": exact_multiply,
-    "trunc_exact_csp": lambda a, b: approx_multiply_with(a, b, EXACT_CSP_WIRING),
-    "proposed": approx_multiply,
-    **{
-        name: (lambda a, b, _w=w: approx_multiply_with(a, b, _w))
-        for name, w in BASELINE_WIRINGS.items()
-    },
+    **{name: make_multiplier(name) for name in WIRINGS},
+    **{f"{name}@{w}": make_multiplier(name, w)
+       for name in WIRINGS for w in (4, 16)},
 }
+
+
+def default_width_names() -> list[str]:
+    """The 8-bit design names (the paper's sweep set, no @N variants)."""
+    return [k for k in ALL_MULTIPLIERS if "@" not in k]
 
 
 # ---------------------------------------------------------------------------
@@ -235,60 +404,74 @@ ALL_MULTIPLIERS: Dict[str, Callable[[Array, Array], Array]] = {
 
 
 class StructuralMultiplier:
-    """Explicit PPM / reduction-tree model of the proposed multiplier.
+    """Explicit PPM / reduction-tree model of a CSP-framework multiplier.
 
-    Builds every kept partial-product bit, wires the three CSP compressors at
-    gate level (carry/sum outputs placed into their columns), reduces the rest
-    exactly, and wraps to 16-bit two's complement. Used only in tests — the
-    closed form is the production path.
+    Builds every kept partial-product bit at width n, places the three CSP
+    compressors' output values into their columns (via the compressor truth
+    tables — value = carry/sum/cout weighted into col/col+1/col+2), reduces
+    the rest exactly, and wraps to 2n-bit two's complement. Used only in
+    tests — the closed form is the production path. Structural bookkeeping
+    of the "+1" inputs: C1a's +1 realizes the 2^(n-1) compensation bit,
+    C1b's +1 the converted ¬(a_{n-1}·b_0) constant, C3's +1 the BW constant
+    2^n; the remaining compensation (which is negative for n<6, where the
+    C1a "+1" overshoots E[T_T] — a software-model artifact, wrapped mod
+    2^{2n}) and the BW 2^{2n-1} constant are added directly.
     """
 
-    def __init__(self, n: int = N_BITS):
-        if n != 8:
-            raise NotImplementedError("structural model is specialized to N=8")
+    def __init__(self, n: int = N_BITS, wiring: CSPWiring = PROPOSED_WIRING):
+        _require_width(n)
         self.n = n
+        self.wiring = wiring
 
     def __call__(self, a: Array, b: Array) -> Array:
-        n = self.n
-        a = jnp.asarray(a, jnp.int32)
-        b = jnp.asarray(b, jnp.int32)
+        n, w = self.n, self.wiring
+        s = n - 1
+        a = wrap_operand(jnp.asarray(a, jnp.int32), n)
+        b = wrap_operand(jnp.asarray(b, jnp.int32), n)
+        zero = jnp.zeros_like(a)
         total = jnp.zeros_like(a)
-
-        consumed = set()
 
         def pos(i, j):
             return _bit(a, i) & _bit(b, j)
 
-        def neg_row(i):  # ¬(a_i · b_7) at column i+7
-            return 1 - (_bit(a, i) & _bit(b, 7))
+        def neg_row(i):  # ¬(a_i · b_{n-1}) at column i+n-1
+            return 1 - (_bit(a, i) & _bit(b, s))
 
-        def neg_col(j):  # ¬(a_7 · b_j) at column j+7
-            return 1 - (_bit(a, 7) & _bit(b, j))
+        def neg_col(j):  # ¬(a_{n-1} · b_j) at column j+n-1
+            return 1 - (_bit(a, s) & _bit(b, j))
 
-        # --- CSP compressors (gate-level) ----------------------------------
-        # C1a @ col 7: approx A+B+C+D+1, +1 = compensation constant 2^7
-        c1a_carry, c1a_sum = comp.proposed4_gates(
-            neg_row(0), pos(1, 6), pos(2, 5), pos(3, 4)
-        )
-        consumed |= {("nr", 0), ("p", 1, 6), ("p", 2, 5), ("p", 3, 4)}
-        total = total + (c1a_sum << 7) + (c1a_carry << 8)
+        t1a, t1b, t3 = _csp_slot_taps(n)
+        consumed = set()
 
-        # C1b @ col 7: exact A+B+C+1, +1 = converted ¬(a7·b0)
-        v1b = comp.exact3_value(pos(4, 3), pos(5, 2), pos(6, 1))
-        consumed |= {("p", 4, 3), ("p", 5, 2), ("p", 6, 1), ("nc", 0)}
-        total = total + (v1b << 7)  # value ∈ [1,4]: full 3-bit result at col 7
+        def feed(c, neg_bit, taps):
+            """Truth-table value of a slot + consumed-tap bookkeeping."""
+            bits = ([] if neg_bit is None else [neg_bit]) + [pos(i, j) for i, j in taps]
+            n_fed = min(len(bits), c.n_inputs)
+            fed_taps = taps[: n_fed - (0 if neg_bit is None else 1)]
+            idx = _slot_index(c, neg_bit, [pos(i, j) for i, j in taps], zero)
+            return c.apply_packed(idx), fed_taps
 
-        # C3 @ col 8: exact A+B+C+D+1, +1 = BW constant 2^8
-        v3 = comp.exact4_value(neg_row(1), pos(2, 6), pos(3, 5), pos(4, 4))
-        consumed |= {("nr", 1), ("p", 2, 6), ("p", 3, 5), ("p", 4, 4)}
-        total = total + (v3 << 8)
+        # --- CSP compressors (truth-table level) ---------------------------
+        # C1a @ col n-1: 4-input slot, +1 = compensation bit 2^(n-1)
+        v1a, fed = feed(w.c1a, neg_row(0), t1a)
+        consumed |= {("nr", 0)} | {("p", i, j) for i, j in fed}
+        total = total + (v1a << (n - 1))
 
-        # --- remaining PPM bits, reduced exactly ----------------------------
-        s = n - 1
+        # C1b @ col n-1: 3-input slot, +1 = converted ¬(a_{n-1}·b_0)
+        v1b, fed = feed(w.c1b, None, t1b)
+        consumed |= {("nc", 0)} | {("p", i, j) for i, j in fed}
+        total = total + (v1b << (n - 1))
+
+        # C3 @ col n: 4-input slot, +1 = BW constant 2^n
+        v3, fed = feed(w.c3, neg_row(1), t3)
+        consumed |= {("nr", 1)} | {("p", i, j) for i, j in fed}
+        total = total + (v3 << n)
+
+        # --- remaining PPM bits, reduced exactly ---------------------------
         for i in range(s):
             for j in range(s):
                 if i + j <= s - 1:
-                    continue  # truncated LSP (cols 0..6)
+                    continue  # truncated LSP (cols 0..n-2)
                 if ("p", i, j) in consumed:
                     continue
                 total = total + (pos(i, j) << (i + j))
@@ -300,12 +483,13 @@ class StructuralMultiplier:
             if ("nc", j) in consumed:
                 continue
             total = total + (neg_col(j) << (j + s))
-        total = total + (pos(7, 7) << (2 * s))
+        total = total + (pos(s, s) << (2 * s))
 
-        # --- constants -------------------------------------------------------
-        total = total + (1 << (2 * n - 1))       # BW constant at 2^15
-        total = total + (1 << (n - 2))           # compensation at 2^6
-        # (compensation 2^7 consumed by C1a; BW 2^8 by C3; the converted
-        #  ¬(a7·b0) appears as the "+1" inside v1b.)
+        # --- constants -----------------------------------------------------
+        total = total + _const32(1 << (2 * n - 1))  # BW constant at 2^(2n-1)
+        # compensation beyond the 2^(n-1) bit realized by C1a's "+1"
+        total = total + (compensation_constant(n) - (1 << (n - 1)))
+        # (BW 2^n consumed by C3's +1; the converted ¬(a_{n-1}·b_0) appears
+        #  as the "+1" inside v1b.)
 
-        return wrap_int16(total)
+        return wrap_to_width(total, 2 * n)

@@ -21,8 +21,10 @@ Execution modes (= registered substrates, selectable per layer / per config):
                        (``kernels/approx_matmul``); interpret-mode fallback
                        off-TPU, bit-identical to ``approx_bitexact``.
 
-A mode string may carry a multiplier wiring suffix
-(``"approx_lut:design_du2022"``); see :func:`repro.nn.substrate.get_substrate`.
+A mode string may carry a multiplier wiring + width suffix
+(``"approx_lut:design_du2022"``, ``"approx_bitexact:proposed@16"``); see
+:func:`repro.nn.substrate.get_substrate` for the full
+``backend[:mult_name[@N]]`` grammar.
 
 NOTE: the approximate multiplier maps (0,0) → +192 (compensation constant
 fires regardless of operands — true to the netlist), so padded/zero entries

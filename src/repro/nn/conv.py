@@ -14,9 +14,14 @@ Two execution paths:
   :class:`~repro.nn.substrate.ProductSubstrate` (including the Pallas
   kernel) runs edge detection under one parity contract.
 
-Pixels are mapped to the signed 8-bit operand domain by an arithmetic right
-shift (0..255 → 0..127), matching the fixed-point convention of
-approximate-multiplier papers; kernel coefficients are signed 8-bit already.
+Pixels are mapped to the signed operand domain of the substrate's width by
+an arithmetic shift (0..255 → 0..2^(N-1)-1; ``>> 1`` at the default N=8),
+matching the fixed-point convention of approximate-multiplier papers;
+kernel coefficients must fit the signed N-bit operand range (coefficients
+outside it wrap, per the multipliers' two's-complement operand contract —
+the Laplacian's center tap 8 wraps to −8 at N=4). Edge maps are rescaled
+back to the 8-bit output range before clipping, so PSNR is comparable
+across widths.
 """
 from __future__ import annotations
 
@@ -33,9 +38,21 @@ Array = jnp.ndarray
 LAPLACIAN = np.array([[-1, -1, -1], [-1, 8, -1], [-1, -1, -1]], dtype=np.int32)
 
 
-def to_signed_pixels(img: Array) -> Array:
-    """uint8 image(s) (0..255) → signed operand domain (0..127)."""
-    return (jnp.asarray(img, jnp.int32) >> 1).astype(jnp.int32)
+def to_signed_pixels(img: Array, n: int = 8) -> Array:
+    """uint8 image(s) (0..255) → signed n-bit operand domain (0..2^(n-1)-1)."""
+    x = jnp.asarray(img, jnp.int32)
+    return (x >> (9 - n)) if n <= 9 else (x << (n - 9))
+
+
+def _rescale_raw(raw: Array, n: int) -> Array:
+    """Map a width-n conv response back to the 8-bit output range.
+
+    Pixels scale as 2^(n-8) relative to the n=8 harness, so the response
+    rescales by 2^(8-n); identity at the default width.
+    """
+    if n == 8:
+        return raw
+    return (raw << (8 - n)) if n < 8 else (raw >> (n - 8))
 
 
 def conv2d_int(img: Array, kernel: Array,
@@ -105,26 +122,35 @@ def conv2d_batched(imgs: Array, kernel: Array,
 def edge_detect(img_u8: Array, mult_name: str = "proposed") -> Array:
     """Laplacian edge map with the named multiplier; returns uint8 map.
 
+    ``mult_name`` may carry a width suffix (``"proposed@4"``) or be a
+    ``csp_*`` alias; pixels are mapped into that width's operand domain.
     Single-image reference path (tap loop); see :func:`edge_detect_batched`.
     """
-    fn = mult.ALL_MULTIPLIERS[mult_name]
-    px = to_signed_pixels(img_u8)
+    _, fn, n = mult.resolve_multiplier(mult_name)
+    px = to_signed_pixels(img_u8, n)
     raw = conv2d_int(px, jnp.asarray(LAPLACIAN), fn)
-    return jnp.clip(raw, 0, 255).astype(jnp.uint8)
+    return jnp.clip(_rescale_raw(raw, n), 0, 255).astype(jnp.uint8)
 
 
 def edge_detect_batched(imgs_u8: Array,
                         substrate: "str | object" = "approx_bitexact") -> Array:
     """Laplacian edge maps for a whole batch under one substrate.
 
-    imgs_u8: (B, H, W) uint8. substrate: spec string (may carry a wiring
-    suffix, e.g. ``"approx_lut:design_du2022"``) or ProductSubstrate.
-    Per-image outputs are bit-identical to :func:`edge_detect` for every
-    scalar-faithful substrate. Returns (B, H, W) uint8.
+    imgs_u8: (B, H, W) uint8. substrate: spec string (may carry a wiring +
+    width suffix, e.g. ``"approx_lut:design_du2022"`` or
+    ``"approx_lut:csp_axc1@4"``) or ProductSubstrate. Pixels are mapped
+    into the substrate's operand width and the response rescaled back to
+    the 8-bit output range. Per-image outputs are bit-identical to
+    :func:`edge_detect` for every scalar-faithful substrate. Returns
+    (B, H, W) uint8.
     """
-    px = to_signed_pixels(imgs_u8)
-    raw = conv2d_batched(px, jnp.asarray(LAPLACIAN), substrate)
-    return jnp.clip(raw, 0, 255).astype(jnp.uint8)
+    from repro.nn import substrate as sub
+
+    s = sub.as_substrate(substrate)
+    n = getattr(s.meta, "width", 8)
+    px = to_signed_pixels(imgs_u8, n)
+    raw = conv2d_batched(px, jnp.asarray(LAPLACIAN), s)
+    return jnp.clip(_rescale_raw(raw, n), 0, 255).astype(jnp.uint8)
 
 
 def psnr(ref: Array, test: Array, peak: float = 255.0) -> float:

@@ -1,10 +1,15 @@
-"""Symmetric int8 quantization for the approximate-multiplier execution modes.
+"""Symmetric integer quantization for the approximate-multiplier modes.
 
-The paper's multiplier consumes signed 8-bit operands; integrating it into a
-neural network therefore requires a quantization boundary. We use standard
-symmetric absmax quantization: per-tensor (dynamic) for activations and
-per-output-channel (static or dynamic) for weights, matching common int8
-inference practice.
+The paper's multiplier consumes signed n-bit operands (8-bit in the paper);
+integrating it into a neural network therefore requires a quantization
+boundary. We use standard symmetric absmax quantization: per-tensor
+(dynamic) for activations and per-output-channel (static or dynamic) for
+weights, matching common int8 inference practice.
+
+Width contract: ``bits`` selects the operand width of the downstream
+multiplier. Values are clipped to ``[-(2^(bits-1)-1), 2^(bits-1)-1]``
+(symmetric — the most negative code is unused, as in standard int8
+practice) and stored as int8 for bits ≤ 8, int16 for 9 ≤ bits ≤ 16.
 """
 from __future__ import annotations
 
@@ -15,14 +20,24 @@ import jax.numpy as jnp
 
 Array = jnp.ndarray
 
-INT8_MAX = 127.0
+
+def qmax(bits: int = 8) -> float:
+    """Largest symmetric quantized magnitude at the given operand width."""
+    if not (2 <= bits <= 16):
+        raise ValueError(f"quantization width must be in [2, 16]; got {bits}")
+    return float((1 << (bits - 1)) - 1)
+
+
+def storage_dtype(bits: int = 8):
+    """Narrowest jnp integer dtype holding signed ``bits``-wide values."""
+    return jnp.int8 if bits <= 8 else jnp.int16
 
 
 @dataclasses.dataclass(frozen=True)
 class Quantized:
-    """int8 values + float scale such that ``values * scale ≈ original``."""
+    """Integer values + float scale such that ``values * scale ≈ original``."""
 
-    values: Array  # int8
+    values: Array  # int8 (bits ≤ 8) or int16
     scale: Array   # f32, broadcastable against values
 
     def dequantize(self) -> Array:
@@ -34,22 +49,26 @@ def _absmax(x: Array, axes: Sequence[int] | None) -> Array:
     return jnp.maximum(m.astype(jnp.float32), 1e-8)
 
 
-def quantize(x: Array, axes: Sequence[int] | None = None) -> Quantized:
-    """Symmetric absmax quantization to int8.
+def quantize(x: Array, axes: Sequence[int] | None = None,
+             bits: int = 8) -> Quantized:
+    """Symmetric absmax quantization to signed ``bits``-wide integers.
 
     axes: reduction axes for the scale (None = per-tensor). E.g. for a weight
     of shape (in, out), ``axes=(0,)`` gives a per-output-channel scale.
     """
-    scale = _absmax(x, axes) / INT8_MAX
-    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
-    return Quantized(q, scale)
+    m = qmax(bits)
+    scale = _absmax(x, axes) / m
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -m, m)
+    return Quantized(q.astype(storage_dtype(bits)), scale)
 
 
-def fake_quantize(x: Array, axes: Sequence[int] | None = None) -> Array:
+def fake_quantize(x: Array, axes: Sequence[int] | None = None,
+                  bits: int = 8) -> Array:
     """Quantize→dequantize (straight-through value); used in QAT-style tests."""
-    q = quantize(x, axes)
+    q = quantize(x, axes, bits)
     return q.dequantize().astype(x.dtype)
 
 
-def quantization_error(x: Array, axes: Sequence[int] | None = None) -> Array:
-    return jnp.abs(fake_quantize(x, axes) - x)
+def quantization_error(x: Array, axes: Sequence[int] | None = None,
+                       bits: int = 8) -> Array:
+    return jnp.abs(fake_quantize(x, axes, bits) - x)

@@ -6,14 +6,17 @@ matmul workloads. This module makes that swap a first-class object instead of
 stringly-typed ``if mode == ...`` chains: a :class:`ProductSubstrate` bundles
 the three contraction capabilities every workload needs
 
-* ``scalar(a, b)``   — the raw int8×int8→int32 product model,
-* ``dot_int8(a, b)`` — integer-domain (M,K)@(K,N) contraction (exact adder),
-* ``dot(x, w)``      — float-domain matmul through the int8 quantization
+* ``scalar(a, b)``   — the raw intN×intN→int32 product model,
+* ``dot_int8(a, b)`` — integer-domain (M,K)@(K,N) contraction (exact adder;
+                       the name is historical — operands are int8 for widths
+                       ≤ 8 and int16 for wider),
+* ``dot(x, w)``      — float-domain matmul through the int-N quantization
                        boundary (per-tensor activations, per-channel weights),
 * ``conv2d(imgs,k)`` — batched NHW(C) 'same' convolution via im2col + dot,
 
-plus :class:`SubstrateMeta` (bit-exactness, preferred backend, cost hints)
-so launchers/benchmarks can reason about a substrate without running it.
+plus :class:`SubstrateMeta` (bit-exactness, operand width, preferred
+backend, cost hints) so launchers/benchmarks can reason about a substrate
+without running it.
 
 Registered backends (``list_substrates()``):
 
@@ -21,28 +24,50 @@ Registered backends (``list_substrates()``):
 * ``int8``            — symmetric int8 quantization, exact int32 matmul.
 * ``approx_bitexact`` — every scalar product through the closed-form
                         multiplier model; bit-identical to the netlist.
-* ``approx_lut``      — same contraction through the 256×256 product LUT.
+                        Any width 3..16.
+* ``approx_lut``      — same contraction through the (2^N)² product LUT.
+                        Widths ≤ 8 (the table must be enumerable).
 * ``approx_stat``     — exact int32 matmul + separable statistical error
-                        model (MXU-friendly deployment stand-in).
+                        model (MXU-friendly deployment stand-in). Widths ≤ 8
+                        (the model is fit on the exhaustive error LUT).
 * ``approx_pallas``   — the tiled Pallas TPU kernel
                         (``kernels/approx_matmul``), interpret-mode fallback
                         off-TPU; bit-identical to ``approx_bitexact``.
+                        Width 8 only (the kernel hard-codes the 8-bit form).
 
-Spec strings select a backend and a multiplier wiring at once:
-``"approx_lut:design_du2022"`` — any name in
-``core.multiplier.ALL_MULTIPLIERS`` is reachable. A bare backend name
-defaults to the paper's ``proposed`` wiring.
+Spec grammar — ``"backend[:mult_name[@N]]"`` — selects a backend, a
+multiplier wiring, and an operand width at once:
 
-NOTE: the approximate multiplier maps (0,0) → +192 (compensation constant
-fires regardless of operands — true to the netlist), so zero padding of the
-contraction dimension injects spurious contributions; every backend corrects
-for f(0,0) where it pads.
+* ``"approx_lut:design_du2022"`` — any name in
+  ``core.multiplier.ALL_MULTIPLIERS`` (or a ``csp_*`` alias) is reachable;
+* ``"approx_lut:csp_axc1@4"`` / ``"approx_bitexact:proposed@16"`` — the same
+  wiring instantiated at 4- or 16-bit operand width;
+* a bare backend name defaults to the paper's ``proposed`` wiring at N=8.
+
+Width contract: ``meta.width`` is the operand width N. Integer operands
+outside the signed N-bit range are **wrapped** (low N bits, sign-extended)
+by every approx backend, so bitexact/LUT stay bit-identical on arbitrary
+ints; the float ``dot`` path quantizes into range so wrapping never fires.
+N=4 and N=8 models are exhaustively verified against the structural netlist
+model in tests; N=16 is verified on random samples.
+
+Accumulator contract: every integer contraction accumulates in int32 (JAX
+runs without x64 here), i.e. sums are exact until they exceed ±2^31 and
+wrap mod 2^32 beyond that. At N ≤ 8 no realistic K overflows; at N=16 the
+worst-case product is ~2^30, so keep K·|products| below 2^31 (edge-detection
+taps and quantized convs do) — ``scalar_faithful`` parity is defined modulo
+2^32.
+
+NOTE: the approximate multiplier maps (0,0) → +compensation_constant(N)
+(the constant fires regardless of operands — true to the netlist; +192 at
+N=8), so zero padding of the contraction dimension injects spurious
+contributions; every backend corrects for f(0,0) where it pads.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Callable, Dict, Protocol, runtime_checkable
+from typing import Callable, Dict, NamedTuple, Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
@@ -76,6 +101,7 @@ class SubstrateMeta:
                       "any" otherwise.
     cost_hint:        dominant execution resource: "mxu" | "vpu" | "gather" |
                       "scalar-emulation".
+    width:            operand width N of the scalar-product unit (bits).
     """
 
     name: str
@@ -84,16 +110,26 @@ class SubstrateMeta:
     scalar_faithful: bool
     preferred_backend: str
     cost_hint: str
+    width: int = mult.N_BITS
+
+    @property
+    def mult_key(self) -> str:
+        """Wiring + width key, as it appears in spec strings (``@8`` implicit)."""
+        if self.width == mult.N_BITS:
+            return self.mult_name
+        return f"{self.mult_name}@{self.width}"
 
     @property
     def spec(self) -> str:
-        return f"{self.name}:{self.mult_name}"
+        return f"{self.name}:{self.mult_key}"
 
     @property
     def label(self) -> str:
-        """Short display name: bare backend for default wirings, full spec
-        otherwise (keeps benchmark row names distinct across wirings)."""
-        return self.name if self.mult_name in ("exact", "proposed") else self.spec
+        """Short display name: bare backend for default wirings at default
+        width, full spec otherwise (keeps benchmark row names distinct)."""
+        if self.mult_name in ("exact", "proposed") and self.width == mult.N_BITS:
+            return self.name
+        return self.spec
 
 
 @runtime_checkable
@@ -117,9 +153,9 @@ class ProductSubstrate(Protocol):
 
 
 @functools.lru_cache(maxsize=None)
-def _stat_tables(mult_name: str) -> tuple[np.ndarray, np.ndarray, float]:
-    """Separable error model (r[a], c[b], µ) from the error LUT."""
-    e = lut_lib.error_lut(mult_name).astype(np.float64)
+def _stat_tables(mult_key: str) -> tuple[np.ndarray, np.ndarray, float]:
+    """Separable error model (r[a], c[b], µ) from the width-N error LUT."""
+    e = lut_lib.error_lut(mult_key).astype(np.float64)
     mu = e.mean()
     r = e.mean(axis=1) - 0.5 * mu
     c = e.mean(axis=0) - 0.5 * mu
@@ -128,7 +164,7 @@ def _stat_tables(mult_name: str) -> tuple[np.ndarray, np.ndarray, float]:
 
 def _bitexact_contract(a8: Array, b8: Array, product_fn,
                        f00: int | None = None) -> Array:
-    """sum_k f(a[m,k], b[k,n]) with f an arbitrary int8×int8→int32 model.
+    """sum_k f(a[m,k], b[k,n]) with f an arbitrary intN×intN→int32 model.
 
     ``f00``: the model's f(0,0) value, needed to correct k-padding. Callers
     that know it statically pass it so the contraction stays traceable (the
@@ -140,7 +176,7 @@ def _bitexact_contract(a8: Array, b8: Array, product_fn,
     assert k == k2, (a8.shape, b8.shape)
     pad = (-k) % _K_CHUNK
     if pad:
-        # pad with zeros, then subtract the spurious f(0,0)=192 contributions
+        # pad with zeros, then subtract the spurious f(0,0) contributions
         a8 = jnp.pad(a8, ((0, 0), (0, pad)))
         b8 = jnp.pad(b8, ((0, pad), (0, 0)))
     steps = a8.shape[1] // _K_CHUNK
@@ -182,20 +218,25 @@ class _SubstrateBase:
     def dot_int8(self, a8: Array, b8: Array) -> Array:
         raise NotImplementedError
 
-    # -- float domain (int8 quantization boundary) ---------------------------
+    def _stor(self, x: Array) -> Array:
+        """Cast integer operands to the width's storage dtype (int8/int16)."""
+        return jnp.asarray(x, quant.storage_dtype(self.meta.width))
+
+    # -- float domain (int-N quantization boundary) ---------------------------
 
     def dot(self, x: Array, w: Array) -> Array:
         """``x @ w`` with this substrate as the scalar-product unit.
 
         x: (..., K) activations (any float dtype); w: (K, N) weights.
         Activations use a per-tensor dynamic scale; weights per-output-channel.
-        Returns the result in x's dtype.
+        Quantization width follows ``meta.width``. Returns x's dtype.
         """
+        bits = self.meta.width
         batch_shape = x.shape[:-1]
         k = x.shape[-1]
         x2 = x.reshape(-1, k)
-        qx = quant.quantize(x2, axes=None)           # per-tensor scalar scale
-        qw = quant.quantize(w, axes=(0,))            # per-output-channel (1, N)
+        qx = quant.quantize(x2, axes=None, bits=bits)   # per-tensor scalar scale
+        qw = quant.quantize(w, axes=(0,), bits=bits)    # per-output-channel (1, N)
         acc = self.dot_int8(qx.values, qw.values)
         out = acc.astype(jnp.float32) * (qx.scale * qw.scale)
         return out.reshape(*batch_shape, w.shape[-1]).astype(x.dtype)
@@ -227,6 +268,12 @@ def _reject_wiring(backend: str, mult_name: str | None) -> None:
             "to select a wiring.")
 
 
+def _split_suffix(mult_name: str | None) -> tuple[str, int]:
+    """Wiring suffix (possibly carrying ``@N``) → (base_name, width)."""
+    base, n = mult.split_width(mult_name or "proposed")
+    return base or "proposed", n
+
+
 class ExactSubstrate(_SubstrateBase):
     """Float reference: plain dot in the compute dtype, exact int contraction."""
 
@@ -240,8 +287,7 @@ class ExactSubstrate(_SubstrateBase):
         return mult.exact_multiply(a, b)
 
     def dot_int8(self, a8, b8):
-        return _exact_int_matmul(jnp.asarray(a8, jnp.int8),
-                                 jnp.asarray(b8, jnp.int8))
+        return _exact_int_matmul(self._stor(a8), self._stor(b8))
 
     def dot(self, x, w):
         return jnp.dot(x, w.astype(x.dtype))
@@ -260,58 +306,64 @@ class Int8Substrate(_SubstrateBase):
         return mult.exact_multiply(a, b)
 
     def dot_int8(self, a8, b8):
-        return _exact_int_matmul(jnp.asarray(a8, jnp.int8),
-                                 jnp.asarray(b8, jnp.int8))
+        return _exact_int_matmul(self._stor(a8), self._stor(b8))
 
 
 class BitexactSubstrate(_SubstrateBase):
-    """Every scalar product through the closed-form multiplier model."""
+    """Every scalar product through the closed-form multiplier model.
+
+    Supports any wiring at any width 3..16 (``"proposed@16"`` etc.)."""
 
     def __init__(self, mult_name: str | None = None):
-        mult_name = mult_name or "proposed"
-        if mult_name not in mult.ALL_MULTIPLIERS:
-            raise ValueError(f"unknown multiplier wiring: {mult_name!r}")
-        self._fn = mult.ALL_MULTIPLIERS[mult_name]
+        base, n = _split_suffix(mult_name)
+        _, self._fn, n = mult.resolve_multiplier(base, n)
         with jax.ensure_compile_time_eval():
             self._f00 = int(self._fn(jnp.zeros((), jnp.int32),
                                      jnp.zeros((), jnp.int32)))
-        self.meta = SubstrateMeta("approx_bitexact", mult_name, bit_exact=True,
+        self.meta = SubstrateMeta("approx_bitexact", base, bit_exact=True,
                                   scalar_faithful=True, preferred_backend="any",
-                                  cost_hint="scalar-emulation")
+                                  cost_hint="scalar-emulation", width=n)
 
     def scalar(self, a, b):
         return self._fn(a, b)
 
     def dot_int8(self, a8, b8):
-        return _bitexact_contract(jnp.asarray(a8, jnp.int8),
-                                  jnp.asarray(b8, jnp.int8), self._fn,
+        return _bitexact_contract(self._stor(a8), self._stor(b8), self._fn,
                                   f00=self._f00)
 
 
 class LutSubstrate(_SubstrateBase):
-    """Gather-based contraction through the 256×256 product LUT."""
+    """Gather-based contraction through the (2^N)² product LUT (N ≤ 8)."""
 
     def __init__(self, mult_name: str | None = None):
-        mult_name = mult_name or "proposed"
-        if mult_name not in mult.ALL_MULTIPLIERS:
-            raise ValueError(f"unknown multiplier wiring: {mult_name!r}")
-        self.meta = SubstrateMeta("approx_lut", mult_name, bit_exact=True,
+        base, n = _split_suffix(mult_name)
+        key, _, n = mult.resolve_multiplier(base, n)
+        if n > lut_lib.MAX_LUT_BITS:
+            raise ValueError(
+                f"approx_lut needs an enumerable product table (width <= "
+                f"{lut_lib.MAX_LUT_BITS}, got {n}); use approx_bitexact for "
+                "wider operands")
+        self._key = key
+        self.meta = SubstrateMeta("approx_lut", base, bit_exact=True,
                                   scalar_faithful=True, preferred_backend="any",
-                                  cost_hint="gather")
+                                  cost_hint="gather", width=n)
 
     def _table(self) -> Array:
-        return jnp.asarray(lut_lib.build_lut(self.meta.mult_name))
+        return jnp.asarray(lut_lib.build_lut(self._key))
 
     def scalar(self, a, b):
         return lut_lib.lut_multiply(a, b, self._table())
 
     def dot_int8(self, a8, b8):
         table = self._table()
-        f00 = int(lut_lib.build_lut(self.meta.mult_name)[128, 128])
-        return _bitexact_contract(jnp.asarray(a8, jnp.int8),
-                                  jnp.asarray(b8, jnp.int8),
-                                  lambda x, y: table[x + 128, y + 128],
-                                  f00=f00)
+        n = self.meta.width
+        size, off = 1 << n, 1 << (n - 1)
+        np_table = lut_lib.build_lut(self._key)
+        f00 = int(np_table[off, off])
+        return _bitexact_contract(
+            self._stor(a8), self._stor(b8),
+            lambda x, y: table[(x + off) & (size - 1), (y + off) & (size - 1)],
+            f00=f00)
 
 
 class StatSubstrate(_SubstrateBase):
@@ -323,31 +375,46 @@ class StatSubstrate(_SubstrateBase):
     multi-pod dry-runs (the Pallas kernel replaces it on real hardware).
     Beyond-paper contribution. The correction is defined at contraction level
     (``scalar_faithful=False``): ``dot_int8`` rounds the summed correction
-    once per output element, while ``scalar`` rounds per product.
+    once per output element, while ``scalar`` rounds per product. Widths ≤ 8
+    (the separable model is fit on the exhaustive error LUT).
     """
 
     def __init__(self, mult_name: str | None = None):
-        mult_name = mult_name or "proposed"
-        if mult_name not in mult.ALL_MULTIPLIERS:
-            raise ValueError(f"unknown multiplier wiring: {mult_name!r}")
-        self.meta = SubstrateMeta("approx_stat", mult_name, bit_exact=False,
+        base, n = _split_suffix(mult_name)
+        key, _, n = mult.resolve_multiplier(base, n)
+        if n > lut_lib.MAX_LUT_BITS:
+            raise ValueError(
+                "approx_stat fits its separable error model on the "
+                f"exhaustive error LUT (width <= {lut_lib.MAX_LUT_BITS}, "
+                f"got {n}); use approx_bitexact for wider operands")
+        self._key = key
+        self.meta = SubstrateMeta("approx_stat", base, bit_exact=False,
                                   scalar_faithful=False, preferred_backend="any",
-                                  cost_hint="mxu")
+                                  cost_hint="mxu", width=n)
 
     def scalar(self, a, b):
-        r, c, _mu = _stat_tables(self.meta.mult_name)
-        a = jnp.asarray(a, jnp.int32)
-        b = jnp.asarray(b, jnp.int32)
-        corr = jnp.asarray(r)[a + 128] + jnp.asarray(c)[b + 128]
+        n = self.meta.width
+        off = 1 << (n - 1)
+        r, c, _mu = _stat_tables(self._key)
+        a = mult.wrap_operand(jnp.asarray(a, jnp.int32), n)
+        b = mult.wrap_operand(jnp.asarray(b, jnp.int32), n)
+        corr = jnp.asarray(r)[a + off] + jnp.asarray(c)[b + off]
         return a * b + corr.astype(jnp.int32)
 
     def dot_int8(self, a8, b8):
-        a8 = jnp.asarray(a8, jnp.int8)
-        b8 = jnp.asarray(b8, jnp.int8)
-        exact = _exact_int_matmul(a8, b8)
-        r, c, _mu = _stat_tables(self.meta.mult_name)
-        ra = jnp.asarray(r)[a8.astype(jnp.int32) + 128].sum(axis=1)  # (m,)
-        cb = jnp.asarray(c)[b8.astype(jnp.int32) + 128].sum(axis=0)  # (n,)
+        n = self.meta.width
+        off = 1 << (n - 1)
+        # wrap into the width's operand domain first (module contract) so
+        # both the exact matmul and the correction gathers see the same
+        # operands the scalar model does
+        aw = mult.wrap_operand(jnp.asarray(a8, jnp.int32), n)
+        bw = mult.wrap_operand(jnp.asarray(b8, jnp.int32), n)
+        # wrapped values fit the storage dtype (width ≤ 8 here), so the
+        # contraction keeps the int8 MXU path
+        exact = _exact_int_matmul(self._stor(aw), self._stor(bw))
+        r, c, _mu = _stat_tables(self._key)
+        ra = jnp.asarray(r)[aw + off].sum(axis=1)  # (m,)
+        cb = jnp.asarray(c)[bw + off].sum(axis=0)  # (n,)
         corr = ra[:, None] + cb[None, :]
         return exact + corr.astype(jnp.int32)
 
@@ -356,18 +423,18 @@ class PallasSubstrate(_SubstrateBase):
     """The tiled Pallas TPU kernel (``kernels/approx_matmul``).
 
     Bit-identical to ``approx_bitexact`` for the proposed wiring (the kernel
-    hard-codes the proposed closed form); runs in interpret mode off-TPU so
-    the same code path is testable on CPU.
+    hard-codes the proposed 8-bit closed form); runs in interpret mode
+    off-TPU so the same code path is testable on CPU.
     """
 
     def __init__(self, mult_name: str | None = None):
-        mult_name = mult_name or "proposed"
-        if mult_name != "proposed":
+        base, n = _split_suffix(mult_name)
+        if base != "proposed" or n != mult.N_BITS:
             raise ValueError(
-                "approx_pallas hard-codes the proposed closed form "
+                "approx_pallas hard-codes the proposed closed form at N=8 "
                 f"(kernels/closed_form.py); got mult_name={mult_name!r}. "
-                "Use approx_lut / approx_bitexact for other wirings.")
-        self.meta = SubstrateMeta("approx_pallas", mult_name, bit_exact=True,
+                "Use approx_lut / approx_bitexact for other wirings/widths.")
+        self.meta = SubstrateMeta("approx_pallas", base, bit_exact=True,
                                   scalar_faithful=True, preferred_backend="tpu",
                                   cost_hint="vpu")
 
@@ -392,7 +459,7 @@ _FACTORIES: Dict[str, Callable[[str], ProductSubstrate]] = {}
 
 def register_substrate(name: str,
                        factory: Callable[..., ProductSubstrate]) -> None:
-    """Register a backend under ``name``; factory takes a mult_name (or
+    """Register a backend under ``name``; factory takes a mult suffix (or
     ``None`` when the spec carried no wiring — each backend applies its own
     default or rejects)."""
     _FACTORIES[name] = factory
@@ -403,14 +470,23 @@ def list_substrates() -> list[str]:
     return sorted(_FACTORIES)
 
 
-def parse_spec(spec: str) -> tuple[str, str]:
-    """``"backend[:mult_name]"`` → (backend, mult_name).
+class SpecParts(NamedTuple):
+    """Parsed ``"backend[:mult_name[@N]]"`` spec string."""
+
+    backend: str
+    mult_name: str
+    width: int
+
+
+def parse_spec(spec: str) -> SpecParts:
+    """``"backend[:mult_name[@N]]"`` → (backend, mult_name, width).
 
     A missing wiring reads as ``"proposed"`` (the approx backends' default;
-    exact backends take no wiring at all).
+    exact backends take no wiring at all); a missing width as 8.
     """
     name, _, suffix = str(spec).partition(":")
-    return name, suffix or "proposed"
+    base, width = mult.split_width(suffix or "proposed")
+    return SpecParts(name, base or "proposed", width)
 
 
 @functools.lru_cache(maxsize=None)
@@ -418,10 +494,11 @@ def get_substrate(spec: str = "exact",
                   mult_name: str | None = None) -> ProductSubstrate:
     """Resolve a spec string to a (cached) substrate instance.
 
-    ``spec`` may carry a wiring suffix (``"approx_lut:design_du2022"``); an
-    explicit ``mult_name`` argument overrides the suffix. Backends validate
-    the wiring: approx backends default a missing one to ``"proposed"``,
-    exact backends reject any wiring outright.
+    ``spec`` may carry a wiring+width suffix (``"approx_lut:design_du2022"``,
+    ``"approx_bitexact:proposed@16"``); an explicit ``mult_name`` argument
+    (which may itself carry ``@N``) overrides the suffix. Backends validate
+    the wiring and width: approx backends default a missing wiring to
+    ``"proposed"`` at width 8, exact backends reject any suffix outright.
     """
     name, _, suffix = str(spec).partition(":")
     if name not in _FACTORIES:

@@ -40,11 +40,17 @@ def test_truncated_sum_range(grid):
     assert t.min() >= 0 and t.max() <= 769  # sum_q (q+1) 2^q, q=0..6
 
 
-def test_output_is_int16_range(grid):
+def test_output_is_in_2n_bit_range(grid):
+    """Every registered model (incl. @4/@16 variants) stays in its own
+    2n-bit two's-complement output range on width-matched operands."""
     a, b = grid
     for name, fn in m.ALL_MULTIPLIERS.items():
-        out = np.asarray(jax.jit(fn)(jnp.asarray(a[::97]), jnp.asarray(b[::97])))
-        assert out.min() >= -(1 << 15) and out.max() < (1 << 15), name
+        _, n = m.split_width(name)
+        aw = np.asarray(m.wrap_operand(jnp.asarray(a[::97]), n))
+        bw = np.asarray(m.wrap_operand(jnp.asarray(b[::97]), n))
+        out = np.asarray(jax.jit(fn)(jnp.asarray(aw), jnp.asarray(bw)))
+        lo, hi = -(1 << (2 * n - 1)), (1 << (2 * n - 1))
+        assert out.min() >= lo and out.max() < hi, name
 
 
 def test_proposed_error_metrics_vs_table4():

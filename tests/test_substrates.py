@@ -36,9 +36,15 @@ def test_spec_parsing_and_mult_reachability():
     # explicit mult_name overrides the suffix
     s2 = sub.get_substrate("approx_lut:design_du2022", mult_name="proposed")
     assert s2.meta.mult_name == "proposed"
-    # every wiring in ALL_MULTIPLIERS is reachable through the lut backend
+    # every entry in ALL_MULTIPLIERS (incl. @4/@16 variants) is reachable
+    # through the bitexact backend; LUT covers the enumerable widths
     for name in mult.ALL_MULTIPLIERS:
-        assert sub.get_substrate("approx_lut", mult_name=name).meta.mult_name == name
+        base, width = mult.split_width(name)
+        s3 = sub.get_substrate("approx_bitexact", mult_name=name)
+        assert (s3.meta.mult_name, s3.meta.width) == (base, width)
+        assert s3.meta.mult_key == (name if width != 8 else base)
+        if width <= 8:
+            assert sub.get_substrate("approx_lut", mult_name=name).meta.width == width
 
 
 def test_unknown_backend_and_wiring_raise():
@@ -204,6 +210,6 @@ def test_model_smoke_approx_pallas_end_to_end():
 
 def test_edge_detect_config_uses_parameterized_spec():
     cfg = reg.get_config("edge-detect")
-    name, mult_name = sub.parse_spec(cfg.dot_mode)
-    assert name == "approx_bitexact" and mult_name == "proposed"
+    name, mult_name, width = sub.parse_spec(cfg.dot_mode)
+    assert name == "approx_bitexact" and mult_name == "proposed" and width == 8
     assert reg.build_bundle(dataclasses.replace(cfg)).substrate.meta.bit_exact

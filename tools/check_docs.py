@@ -1,0 +1,98 @@
+#!/usr/bin/env python
+"""Docs link checker: every internal link and referenced repo path resolves.
+
+Scans ``docs/*.md`` and ``README.md`` for
+
+* markdown links ``[text](target)`` — relative targets must exist on disk
+  (``#anchors`` within a file are stripped; http(s)/mailto links are
+  skipped);
+* inline-code repo paths like ```src/repro/core/multiplier.py`` or
+  ``tools/check_docs.py`` — any backticked token that looks like a repo
+  path (starts with a known top-level directory or is a root-level
+  ``*.md``/``*.py``) must exist.
+
+Exit code 0 when everything resolves, 1 with a per-file report otherwise.
+Run from anywhere: paths resolve against the repo root (this file's
+parent's parent).
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+CODE_RE = re.compile(r"`([^`\n]+)`")
+PATH_PREFIXES = ("src/", "docs/", "tools/", "tests/", "benchmarks/",
+                 "examples/", ".github/")
+SKIP_SCHEMES = ("http://", "https://", "mailto:")
+
+
+def _doc_files() -> list[Path]:
+    files = sorted((REPO / "docs").glob("*.md")) if (REPO / "docs").is_dir() else []
+    readme = REPO / "README.md"
+    if readme.exists():
+        files.append(readme)
+    return files
+
+
+def _looks_like_repo_path(token: str) -> bool:
+    if not re.fullmatch(r"[\w./\-]+", token):
+        return False
+    if token.startswith(PATH_PREFIXES):
+        return True
+    # root-level files like README.md / ROADMAP.md / pyproject.toml
+    return "/" not in token and token.endswith((".md", ".toml")) \
+        and token[0].isupper() or token == "pyproject.toml"
+
+
+FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def check_file(path: Path) -> list[str]:
+    errors = []
+    text = path.read_text(encoding="utf-8")
+    prose = FENCE_RE.sub("", text)  # links only count outside code fences
+
+    for target in LINK_RE.findall(prose):
+        if target.startswith(SKIP_SCHEMES):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:  # pure in-page anchor
+            continue
+        resolved = (path.parent / rel).resolve()
+        if not resolved.exists():
+            errors.append(f"broken link: ({target})")
+
+    for token in CODE_RE.findall(text):
+        token = token.strip()
+        if not _looks_like_repo_path(token):
+            continue
+        if not (REPO / token).exists():
+            errors.append(f"missing repo path: `{token}`")
+    return errors
+
+
+def main() -> int:
+    files = _doc_files()
+    if not files:
+        print("check_docs: no docs found", file=sys.stderr)
+        return 1
+    failed = False
+    for f in files:
+        errs = check_file(f)
+        rel = f.relative_to(REPO)
+        if errs:
+            failed = True
+            print(f"{rel}:")
+            for e in errs:
+                print(f"  {e}")
+        else:
+            print(f"{rel}: OK")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
