@@ -53,12 +53,16 @@ def run(substrates=None) -> list:
         rows.append((f"fig9/batched8/{s.meta.label}", us, "imgs=8x64x64"))
 
     # width sweep: the proposed wiring at 4/8/16-bit operand width (the
-    # response is rescaled to the 8-bit range, so PSNR is comparable)
+    # response is rescaled to the 8-bit range, so PSNR is comparable), plus
+    # the pallas × wiring × width rows the LUT kernel unlocks — every
+    # wiring is now TPU-runnable, not just proposed@8 (interpret off-TPU)
     img = photo_like(128, 128)
     ref = np.asarray(conv.edge_detect_batched(img[None], "exact"))[0]
-    print("\n== Fig 9+: operand-width sweep (proposed wiring) ==")
+    print("\n== Fig 9+: operand-width sweep (incl. pallas wirings) ==")
     for spec in ("approx_lut:proposed@4", "approx_lut:proposed",
-                 "approx_bitexact:proposed@16"):
+                 "approx_bitexact:proposed@16",
+                 "approx_pallas:proposed@4", "approx_pallas:csp_axc1@4",
+                 "approx_pallas:design_strollo2020"):
         t0 = time.perf_counter()
         out = np.asarray(conv.edge_detect_batched(img[None], spec))[0]
         us = (time.perf_counter() - t0) * 1e6

@@ -46,6 +46,27 @@ def run(substrates=None) -> list:
         print(f"{spec:>16s}: {us:10.0f} us  ({gmacs:6.2f} GMAC/s){note}")
         rows.append((f"kernel/matmul_{s.meta.label}", us, f"gmacs={gmacs:.2f}"))
 
+    # pallas × wiring × width sweep: the LUT-input kernel makes every
+    # wiring TPU-runnable; proposed@8 rides the closed-form fast path
+    # (cost_hint "vpu"), everything else the flat-table gather ("gather").
+    pm, pk, pn = 128, 128, 128
+    pa = jnp.asarray(rng.integers(-128, 128, (pm, pk)), jnp.int8)
+    pb = jnp.asarray(rng.integers(-128, 128, (pk, pn)), jnp.int8)
+    pmacs = pm * pk * pn
+    print(f"\n== kernel bench: pallas wiring x width sweep ({pm}x{pk}x{pn}) ==")
+    for wiring in ("proposed", "csp_axc1", "design_strollo2020"):
+        for width in (4, 8):
+            spec = f"approx_pallas:{wiring}@{width}"
+            s = sub.get_substrate(spec)
+            f = jax.jit(lambda a, b, _s=s: _s.dot_int8(a, b))
+            us = _time(f, pa, pb)
+            gmacs = pmacs / us / 1e3
+            note = " [interpret]" if jax.default_backend() != "tpu" else ""
+            print(f"{spec:>34s}: {us:10.0f} us  ({gmacs:6.2f} GMAC/s) "
+                  f"[{s.meta.cost_hint}]{note}")
+            rows.append((f"kernel/pallas_{wiring}@{width}", us,
+                         f"gmacs={gmacs:.2f};cost={s.meta.cost_hint}"))
+
     from repro.kernels.approx_mul.ops import approx_mul
     x = jnp.asarray(rng.integers(-128, 128, (512, 512)), jnp.int32)
     y = jnp.asarray(rng.integers(-128, 128, (512, 512)), jnp.int32)

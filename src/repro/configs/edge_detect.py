@@ -5,8 +5,9 @@ Not an LM — selects the conv pipeline + Pallas kernel; registered for
 
 ``dot_mode`` is a ProductSubstrate spec (``repro.nn.substrate``); the
 parameterized form pins the multiplier wiring explicitly. Override to
-``"approx_pallas"`` for the TPU kernel path or ``"approx_lut:<design>"``
-for any baseline wiring.
+``"approx_pallas"`` for the TPU kernel path (any wiring/width ≤ 8 via the
+LUT kernel, e.g. ``"approx_pallas:csp_axc1@4"``) or
+``"approx_lut:<design>"`` for any baseline wiring.
 """
 from repro.models.common import ModelConfig
 from repro.models.registry import register

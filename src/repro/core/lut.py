@@ -88,6 +88,32 @@ def lut_multiply(a: Array, b: Array, lut: Array) -> Array:
     return lut[ai, bi]
 
 
+def flat_lut(mult_name: str) -> np.ndarray:
+    """Flat ``(2^{2n},)`` view of the product table for gather kernels.
+
+    Entry layout matches the index the LUT Pallas kernel computes:
+    ``flat[((a + off) & mask) << n | ((b + off) & mask)] = mult(a, b)``
+    with ``off = 2^(n-1)``, ``mask = 2^n - 1`` — i.e. a row-major flatten
+    of the 2-D table, so the 2-D and flat gathers hit identical entries.
+    """
+    return build_lut(mult_name).reshape(-1)
+
+
+def f00(mult_name: str) -> int:
+    """The model's product at (0, 0) — the k-padding correction constant.
+
+    Approximate wirings map (0,0) to a nonzero value (the compensation
+    constant fires regardless of operands), and that value differs across
+    wirings and widths (e.g. proposed@8 → 192, design_strollo2020@8 → 64,
+    proposed@4 → 4): any contraction that zero-pads the k dimension must
+    subtract *this wiring's* f(0,0) per padded element, never a hard-coded
+    constant. Shared by ``kernels/approx_matmul`` and ``kernels/lut_matmul``.
+    """
+    table = build_lut(mult_name)
+    off = 1 << (_lut_width(table) - 1)
+    return int(table[off, off])
+
+
 def error_lut(mult_name: str) -> np.ndarray:
     """(2^n)×(2^n) table of (approx − exact) — compact error characterization."""
     table = build_lut(mult_name)

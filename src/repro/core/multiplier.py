@@ -99,14 +99,18 @@ def _require_width(n: int) -> None:
 
 
 def split_width(key: str, default: int = N_BITS) -> tuple[str, int]:
-    """``"name[@N]"`` → (name, N). A bare name reads as the default width."""
+    """``"name[@N]"`` → (name, N). A bare name reads as the default width.
+
+    The width must be a bare decimal integer — ``"@ 8"`` / ``"@+8"`` are
+    rejected rather than silently normalized (``int()`` would accept both,
+    turning a config typo into a well-formed key).
+    """
     base, sep, w = str(key).partition("@")
     if not sep:
         return base, default
-    try:
-        n = int(w)
-    except ValueError:
-        raise ValueError(f"bad width suffix in multiplier key {key!r}") from None
+    if not (w.isascii() and w.isdigit()):
+        raise ValueError(f"bad width suffix in multiplier key {key!r}")
+    n = int(w)
     _require_width(n)
     return base, n
 
@@ -376,8 +380,12 @@ def resolve_multiplier(key: str, n: int | None = None
     it is the cache key for the width-indexed LUTs.
     """
     base, kn = split_width(key)
+    if not base:
+        raise ValueError(
+            f"malformed multiplier key {key!r}: a width needs a wiring name "
+            "(name[@N]), e.g. 'proposed@4'")
     width = n if n is not None else kn
-    base = WIRING_ALIASES.get(base, base) or "proposed"
+    base = WIRING_ALIASES.get(base, base)
     key_c = base if width == N_BITS else f"{base}@{width}"
     return key_c, make_multiplier(base, width), width
 

@@ -3,4 +3,10 @@
 Each kernel ships as kernel.py (pl.pallas_call + BlockSpec tiling),
 ops.py (jit'd public wrapper, padding, interpret fallback off-TPU) and
 ref.py (pure-jnp oracle used by the allclose test sweeps).
+
+* ``approx_mul`` / ``approx_matmul`` / ``laplacian_conv`` — the proposed
+  8-bit multiplier's closed form (elementwise, matmul, 3×3 conv).
+* ``lut_matmul`` — wiring/width-generic matmul: the scalar product is a
+  gather into a flat (2^N · 2^N,) product table, so every wiring in
+  ``core.multiplier.ALL_MULTIPLIERS`` at widths 3..8 is TPU-runnable.
 """

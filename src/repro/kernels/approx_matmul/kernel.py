@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import blocking
 from repro.kernels.closed_form import approx_product_i32
 
 
@@ -50,11 +51,16 @@ def approx_matmul_pallas(a, b, *, block_m: int = 128, block_n: int = 128,
     """(M,K) @ (K,N) int8-domain contraction under the proposed multiplier.
 
     a: (M, K) int32 in [-128,127]; b: (K, N) int32. Returns (M, N) int32.
-    All dims must be multiples of their block sizes (ops.py pads + corrects
-    for the multiplier's f(0,0)=192 padding artifact).
+    All dims must be multiples of their block sizes — non-multiples raise
+    instead of silently computing garbage (``ops.approx_matmul`` pads
+    arbitrary shapes and corrects for the multiplier's f(0,0) padding
+    artifact).
     """
     m, k = a.shape
     _, n = b.shape
+    blocking.check_kernel_shapes(
+        "approx_matmul_pallas", "kernels.approx_matmul.ops.approx_matmul",
+        a.shape, b.shape, block_m, block_n, block_k)
     grid = (m // block_m, n // block_n, k // block_k)
     return pl.pallas_call(
         functools.partial(_matmul_kernel, block_k=block_k),

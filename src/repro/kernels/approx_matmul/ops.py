@@ -6,11 +6,23 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core import lut as lut_lib
+from repro.kernels import blocking
 from repro.kernels.approx_matmul.kernel import approx_matmul_pallas
 
 _INTERPRET = jax.default_backend() != "tpu"
 
-_F00 = 192  # f(0,0) of the proposed multiplier (compensation constant)
+
+@functools.lru_cache(maxsize=None)
+def _f00() -> int:
+    """f(0,0) of the proposed multiplier, looked up from its product table.
+
+    Shared with ``kernels/lut_matmul`` through ``core.lut.f00`` — the value
+    is per-wiring/per-width (192 only for proposed@8), so a hard-coded
+    constant here would silently miscompute the moment any other wiring
+    reached this kernel.
+    """
+    return lut_lib.f00("proposed")
 
 
 @functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k"))
@@ -23,23 +35,8 @@ def approx_matmul(a, b, block_m: int = 128, block_n: int = 128, block_k: int = 1
     """
     a = jnp.asarray(a, jnp.int32)
     b = jnp.asarray(b, jnp.int32)
-    m, k = a.shape
-    k2, n = b.shape
-    assert k == k2
-    bm = min(block_m, _ceil_to(m, 8))
-    bn = min(block_n, _ceil_to(n, 128))
-    bk = min(block_k, _ceil_to(k, 8))
-    pm, pn, pk = (-m) % bm, (-n) % bn, (-k) % bk
-    ap = jnp.pad(a, ((0, pm), (0, pk)))
-    bp = jnp.pad(b, ((0, pk), (0, pn)))
-    out = approx_matmul_pallas(
-        ap, bp, block_m=bm, block_n=bn, block_k=bk, interpret=_INTERPRET
-    )
-    out = out[:m, :n]
-    if pk:
-        out = out - _F00 * pk
-    return out
-
-
-def _ceil_to(x: int, mult: int) -> int:
-    return max(mult, ((x + mult - 1) // mult) * mult) if x > 0 else mult
+    return blocking.pad_crop_correct(
+        a, b, _f00(),
+        lambda ap, bp, bm, bn, bk: approx_matmul_pallas(
+            ap, bp, block_m=bm, block_n=bn, block_k=bk, interpret=_INTERPRET),
+        block_m=block_m, block_n=block_n, block_k=block_k)

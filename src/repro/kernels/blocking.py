@@ -1,0 +1,70 @@
+"""Shared pad-to-block / crop / f(0,0)-correct plumbing for matmul kernels.
+
+Both Pallas matmul wrappers (``approx_matmul/ops.py``, ``lut_matmul/ops.py``)
+accept arbitrary (M, K, N) and present block-multiple shapes to their
+kernel: clamp the requested block sizes to TPU-tileable minima, zero-pad
+every dim up, crop the result, and subtract the multiplier's f(0,0) per
+padded k element (approximate wirings map (0,0) to a nonzero compensation
+value, so k-padding injects spurious contributions). One implementation
+here so the two kernel paths cannot silently diverge.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+
+# TPU int32 tile: the second-to-last dim aligns to 8 sublanes, the last to
+# 128 lanes — block clamps for small shapes round up to these.
+_SUBLANE, _LANE = 8, 128
+
+
+def ceil_to(x: int, mult: int) -> int:
+    """Round ``x`` up to a positive multiple of ``mult``."""
+    return max(mult, ((x + mult - 1) // mult) * mult) if x > 0 else mult
+
+
+def check_kernel_shapes(kernel_name: str, ops_name: str, a_shape, b_shape,
+                        block_m: int, block_n: int, block_k: int) -> None:
+    """Loud shape contract for the raw (block-multiple-only) kernels.
+
+    Raises on a contraction-dim mismatch or any non-block-multiple dim —
+    the raw kernels would otherwise silently compute garbage; the ops
+    wrappers pad arbitrary shapes and correct the f(0,0) padding artifact.
+    """
+    m, k = a_shape
+    k2, n = b_shape
+    if k != k2:
+        raise ValueError(
+            f"contraction-dim mismatch: a is {tuple(a_shape)}, "
+            f"b is {tuple(b_shape)}")
+    if m % block_m or n % block_n or k % block_k:
+        raise ValueError(
+            f"{kernel_name} requires every dim to be a multiple of its "
+            f"block size: got (M, K, N)=({m}, {k}, {n}) with blocks "
+            f"(block_m, block_k, block_n)=({block_m}, {block_k}, {block_n})."
+            f" Call {ops_name}, which pads and corrects the f(0,0) padding "
+            "artifact.")
+
+
+def pad_crop_correct(a, b, f00, kernel_call: Callable, *, block_m: int,
+                     block_n: int, block_k: int):
+    """Run a block-multiple-only matmul kernel on arbitrary (M,K)@(K,N).
+
+    ``kernel_call(ap, bp, bm, bn, bk)`` receives the padded operands and the
+    clamped block sizes; ``f00`` is the scalar-product model's value at
+    (0, 0) (python int or traced scalar) used to correct the k-padding.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    bm = min(block_m, ceil_to(m, _SUBLANE))
+    bn = min(block_n, ceil_to(n, _LANE))
+    bk = min(block_k, ceil_to(k, _SUBLANE))
+    pm, pn, pk = (-m) % bm, (-n) % bn, (-k) % bk
+    ap = jnp.pad(a, ((0, pm), (0, pk)))
+    bp = jnp.pad(b, ((0, pk), (0, pn)))
+    out = kernel_call(ap, bp, bm, bn, bk)[:m, :n]
+    if pk:
+        out = out - f00 * pk
+    return out

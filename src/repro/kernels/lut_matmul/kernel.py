@@ -1,0 +1,98 @@
+"""Tiled LUT-input approximate matmul Pallas kernel (any wiring, N ≤ 8).
+
+Width- and wiring-generic sibling of ``kernels/approx_matmul``: instead of
+hard-coding one closed form, the scalar product is a gather into a flat
+``(2^N · 2^N,)`` int32 product table (``core.lut.flat_lut``), so every
+wiring in ``core.multiplier.ALL_MULTIPLIERS`` — and every enumerable width
+3..8 — runs on the same kernel. The gather index for a product f(a, b) is
+
+    idx = ((a + 2^(N-1)) & (2^N - 1)) << N  |  ((b + 2^(N-1)) & (2^N - 1))
+
+which both biases the signed operands into table rows/cols and wraps
+out-of-range ints to their low-N-bits value — the same operand-wraparound
+semantics the closed form and the 2-D LUT gather implement.
+
+Tiling matches ``approx_matmul``: grid (M/bm, N/bn, K/bk); the (bm, bn)
+output block is revisited across the k dimension (TPU sequential grid) and
+accumulated in place; the inner k-slab walks a (bm, 1) column of A against
+a (1, bn) row of B. The table rides along as a VMEM-resident input (256 KiB
+at N=8, the worst case), so each product is a few VPU index ops plus one
+VMEM gather. Interpret mode runs the identical kernel body off-TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import blocking
+
+
+def table_width(size: int) -> int:
+    """Operand width N implied by a flat table length 2^(2N)."""
+    n = (max(int(size), 1).bit_length() - 1) // 2
+    if (1 << (2 * n)) != size:
+        raise ValueError(
+            f"not a flat product-LUT length: {size} (expected 2^(2N) for an "
+            "operand width N; build it with core.lut.flat_lut)")
+    return n
+
+
+def _lut_matmul_kernel(a_ref, b_ref, t_ref, o_ref, *, block_k: int,
+                       n_bits: int):
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    mask = (1 << n_bits) - 1
+    off = 1 << (n_bits - 1)
+    a = a_ref[...].astype(jnp.int32)  # (bm, bk)
+    b = b_ref[...].astype(jnp.int32)  # (bk, bn)
+    table = t_ref[...]                # (2^{2n},) flat product table
+
+    def body(kk, acc):
+        a_col = jax.lax.dynamic_slice_in_dim(a, kk, 1, axis=1)  # (bm, 1)
+        b_row = jax.lax.dynamic_slice_in_dim(b, kk, 1, axis=0)  # (1, bn)
+        ai = (a_col + off) & mask
+        bi = (b_row + off) & mask
+        idx = (ai << n_bits) | bi                               # (bm, bn)
+        return acc + jnp.take(table, idx, axis=0)
+
+    acc = jax.lax.fori_loop(0, block_k, body, jnp.zeros_like(o_ref))
+    o_ref[...] += acc
+
+
+def lut_matmul_pallas(a, b, table, *, block_m: int = 128, block_n: int = 128,
+                      block_k: int = 128, interpret: bool = False):
+    """(M,K) @ (K,N) contraction with the scalar product read from ``table``.
+
+    a: (M, K) int32; b: (K, N) int32; table: flat (2^{2n},) int32 product
+    LUT (``core.lut.flat_lut``). Returns (M, N) int32. Every dim must be a
+    multiple of its block size — ``ops.lut_matmul`` pads arbitrary shapes
+    and corrects the f(0,0) padding artifact; direct callers get a loud
+    error instead of silent garbage.
+    """
+    m, k = a.shape
+    _, n = b.shape
+    blocking.check_kernel_shapes(
+        "lut_matmul_pallas", "kernels.lut_matmul.ops.lut_matmul",
+        a.shape, b.shape, block_m, block_n, block_k)
+    n_bits = table_width(table.shape[0])
+    grid = (m // block_m, n // block_n, k // block_k)
+    return pl.pallas_call(
+        functools.partial(_lut_matmul_kernel, block_k=block_k, n_bits=n_bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+            # the whole flat table, resident in VMEM at every grid step
+            pl.BlockSpec((table.shape[0],), lambda i, j, kk: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=interpret,
+    )(a, b, table)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the LUT-input approximate matmul kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import lut as lut_lib
+from repro.kernels.lut_matmul.kernel import table_width
+
+
+def lut_matmul_ref(a, b, table):
+    """sum_k lut[a[m,k], b[k,n]] through the 2-D LUT gather.
+
+    Materializes the (M, K, N) product tensor — oracle for small shapes
+    only. ``table`` may be the flat (2^{2n},) or the square (2^n, 2^n) LUT.
+    """
+    a = jnp.asarray(a, jnp.int32)
+    b = jnp.asarray(b, jnp.int32)
+    table = jnp.asarray(table, jnp.int32)
+    if table.ndim == 1:
+        n_bits = table_width(table.shape[0])
+        table = table.reshape(1 << n_bits, 1 << n_bits)
+    prod = lut_lib.lut_multiply(a[:, :, None], b[None, :, :], table)
+    return prod.sum(axis=1).astype(jnp.int32)

@@ -17,9 +17,12 @@ Execution modes (= registered substrates, selectable per layer / per config):
 * ``approx_stat``    — exact int32 matmul + *separable statistical error
                        model*: E[e(a,b)] ≈ r[a] + c[b] − µ. MXU-friendly
                        deployment-scale stand-in. Beyond-paper contribution.
-* ``approx_pallas``  — the tiled Pallas TPU kernel
-                       (``kernels/approx_matmul``); interpret-mode fallback
-                       off-TPU, bit-identical to ``approx_bitexact``.
+* ``approx_pallas``  — the tiled Pallas TPU kernels: the closed-form
+                       kernel (``kernels/approx_matmul``) for proposed@8,
+                       the LUT-input kernel (``kernels/lut_matmul``) for
+                       every other wiring at widths 3..8; interpret-mode
+                       fallback off-TPU, bit-identical to
+                       ``approx_bitexact``.
 
 A mode string may carry a multiplier wiring + width suffix
 (``"approx_lut:design_du2022"``, ``"approx_bitexact:proposed@16"``); see

@@ -30,10 +30,13 @@ Registered backends (``list_substrates()``):
 * ``approx_stat``     — exact int32 matmul + separable statistical error
                         model (MXU-friendly deployment stand-in). Widths ≤ 8
                         (the model is fit on the exhaustive error LUT).
-* ``approx_pallas``   — the tiled Pallas TPU kernel
-                        (``kernels/approx_matmul``), interpret-mode fallback
-                        off-TPU; bit-identical to ``approx_bitexact``.
-                        Width 8 only (the kernel hard-codes the 8-bit form).
+* ``approx_pallas``   — the tiled Pallas TPU kernels, interpret-mode
+                        fallback off-TPU; bit-identical to
+                        ``approx_bitexact``. Any wiring at widths 3..8:
+                        ``proposed``@8 runs the closed-form kernel
+                        (``kernels/approx_matmul``), every other
+                        wiring/width the LUT-input kernel
+                        (``kernels/lut_matmul``).
 
 Spec grammar — ``"backend[:mult_name[@N]]"`` — selects a backend, a
 multiplier wiring, and an operand width at once:
@@ -269,9 +272,18 @@ def _reject_wiring(backend: str, mult_name: str | None) -> None:
 
 
 def _split_suffix(mult_name: str | None) -> tuple[str, int]:
-    """Wiring suffix (possibly carrying ``@N``) → (base_name, width)."""
+    """Wiring suffix (possibly carrying ``@N``) → (base_name, width).
+
+    An empty wiring name in front of a width (``"@4"``) is rejected, not
+    defaulted: a config typo that drops the wiring but keeps ``@N`` would
+    otherwise silently run the proposed design instead of the intended one.
+    """
     base, n = mult.split_width(mult_name or "proposed")
-    return base or "proposed", n
+    if not base:
+        raise ValueError(
+            f"malformed multiplier suffix {mult_name!r}: a width needs a "
+            "wiring name (mult_name[@N]), e.g. 'proposed@4'")
+    return base, n
 
 
 class ExactSubstrate(_SubstrateBase):
@@ -358,12 +370,10 @@ class LutSubstrate(_SubstrateBase):
         table = self._table()
         n = self.meta.width
         size, off = 1 << n, 1 << (n - 1)
-        np_table = lut_lib.build_lut(self._key)
-        f00 = int(np_table[off, off])
         return _bitexact_contract(
             self._stor(a8), self._stor(b8),
             lambda x, y: table[(x + off) & (size - 1), (y + off) & (size - 1)],
-            f00=f00)
+            f00=lut_lib.f00(self._key))
 
 
 class StatSubstrate(_SubstrateBase):
@@ -420,34 +430,58 @@ class StatSubstrate(_SubstrateBase):
 
 
 class PallasSubstrate(_SubstrateBase):
-    """The tiled Pallas TPU kernel (``kernels/approx_matmul``).
+    """Tiled Pallas TPU contraction for any wiring at widths 3..8.
 
-    Bit-identical to ``approx_bitexact`` for the proposed wiring (the kernel
-    hard-codes the proposed 8-bit closed form); runs in interpret mode
-    off-TPU so the same code path is testable on CPU.
+    Two kernels behind one spec family, both bit-identical to
+    ``approx_bitexact`` at the same wiring/width and both running in
+    interpret mode off-TPU so the code path is testable on CPU:
+
+    * ``proposed``@8 — the closed-form kernel (``kernels/approx_matmul``),
+      ~25 VPU integer ops per product (fast path, cost hint ``vpu``);
+    * everything else — the LUT-input kernel (``kernels/lut_matmul``): the
+      scalar product is one gather into the wiring's flat (2^N · 2^N,)
+      product table, VMEM-resident for N ≤ 8 (cost hint ``gather``).
+
+    Widths above ``MAX_LUT_BITS`` are rejected — the LUT kernel needs an
+    enumerable product table; use ``approx_bitexact`` for wider operands.
     """
 
     def __init__(self, mult_name: str | None = None):
         base, n = _split_suffix(mult_name)
-        if base != "proposed" or n != mult.N_BITS:
+        key, _, n = mult.resolve_multiplier(base, n)
+        if n > lut_lib.MAX_LUT_BITS:
             raise ValueError(
-                "approx_pallas hard-codes the proposed closed form at N=8 "
-                f"(kernels/closed_form.py); got mult_name={mult_name!r}. "
-                "Use approx_lut / approx_bitexact for other wirings/widths.")
-        self.meta = SubstrateMeta("approx_pallas", base, bit_exact=True,
-                                  scalar_faithful=True, preferred_backend="tpu",
-                                  cost_hint="vpu")
+                "approx_pallas needs an enumerable product table for its "
+                f"LUT kernel (width <= {lut_lib.MAX_LUT_BITS}, got {n}); "
+                "use approx_bitexact for wider operands")
+        self._key = key
+        self._closed_form = base == "proposed" and n == mult.N_BITS
+        self.meta = SubstrateMeta(
+            "approx_pallas", base, bit_exact=True, scalar_faithful=True,
+            preferred_backend="tpu",
+            cost_hint="vpu" if self._closed_form else "gather", width=n)
+
+    def _table(self) -> Array:
+        return jnp.asarray(lut_lib.flat_lut(self._key))
 
     def scalar(self, a, b):
-        from repro.kernels.closed_form import approx_product_i32
+        if self._closed_form:
+            from repro.kernels.closed_form import approx_product_i32
 
-        return approx_product_i32(a, b)
+            return approx_product_i32(a, b)
+        return lut_lib.lut_multiply(
+            a, b, jnp.asarray(lut_lib.build_lut(self._key)))
 
     def dot_int8(self, a8, b8):
-        from repro.kernels.approx_matmul.ops import approx_matmul
+        a8 = jnp.asarray(a8, jnp.int32)
+        b8 = jnp.asarray(b8, jnp.int32)
+        if self._closed_form:
+            from repro.kernels.approx_matmul.ops import approx_matmul
 
-        return approx_matmul(jnp.asarray(a8, jnp.int32),
-                             jnp.asarray(b8, jnp.int32))
+            return approx_matmul(a8, b8)
+        from repro.kernels.lut_matmul.ops import lut_matmul
+
+        return lut_matmul(a8, b8, self._table())
 
 
 # ---------------------------------------------------------------------------
@@ -478,15 +512,44 @@ class SpecParts(NamedTuple):
     width: int
 
 
+def _split_spec(spec: str) -> tuple[str, str | None]:
+    """Validated ``"backend[:mult_name[@N]]"`` split → (backend, suffix).
+
+    Rejects malformed specs instead of silently normalizing them: an empty
+    backend or wiring suffix (``"exact:"``, ``":proposed"``) and any
+    whitespace (``"approx_pallas:proposed@8 "``) are grammar errors — a
+    stray character in a config would otherwise parse as a different,
+    well-formed spec.
+    """
+    s = str(spec)
+    if not s or any(c.isspace() for c in s):
+        raise ValueError(
+            f"malformed substrate spec {spec!r}: specs follow "
+            "backend[:mult_name[@N]] with no whitespace")
+    name, sep, suffix = s.partition(":")
+    if not name or (sep and not suffix):
+        part = "backend" if not name else "wiring suffix"
+        raise ValueError(
+            f"malformed substrate spec {spec!r}: empty {part} — specs "
+            "follow backend[:mult_name[@N]]")
+    return name, (suffix if sep else None)
+
+
 def parse_spec(spec: str) -> SpecParts:
     """``"backend[:mult_name[@N]]"`` → (backend, mult_name, width).
 
     A missing wiring reads as ``"proposed"`` (the approx backends' default;
-    exact backends take no wiring at all); a missing width as 8.
+    exact backends take no wiring at all); a missing width as 8. Malformed
+    specs (empty parts — including an empty wiring name before ``@N`` —
+    and whitespace) raise ``ValueError``.
     """
-    name, _, suffix = str(spec).partition(":")
+    name, suffix = _split_spec(spec)
     base, width = mult.split_width(suffix or "proposed")
-    return SpecParts(name, base or "proposed", width)
+    if not base:
+        raise ValueError(
+            f"malformed substrate spec {spec!r}: empty wiring name before "
+            "'@' — specs follow backend[:mult_name[@N]]")
+    return SpecParts(name, base, width)
 
 
 @functools.lru_cache(maxsize=None)
@@ -500,7 +563,7 @@ def get_substrate(spec: str = "exact",
     the wiring and width: approx backends default a missing wiring to
     ``"proposed"`` at width 8, exact backends reject any suffix outright.
     """
-    name, _, suffix = str(spec).partition(":")
+    name, suffix = _split_spec(spec)
     if name not in _FACTORIES:
         raise ValueError(
             f"unknown product substrate: {name!r} (known: {list_substrates()})")

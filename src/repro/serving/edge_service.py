@@ -4,7 +4,8 @@
 shape, and drains each bucket through
 :func:`repro.nn.conv.edge_detect_batched` on any registered
 :class:`~repro.nn.substrate.ProductSubstrate` spec (``"approx_pallas"``,
-``"approx_lut:design_du2022"``, …).
+``"approx_lut:design_du2022"``, ``"approx_pallas:csp_axc1@4"`` — the
+Pallas path serves any wiring at widths 3..8 via the LUT kernel, …).
 
 Bit-identity contract: a served edge map equals the direct
 ``edge_detect_batched(img[None], substrate)[0]`` exactly, for every

@@ -219,6 +219,24 @@ def test_edge_service_bit_identical_per_substrate(spec):
     assert svc.metrics.requests_served == len(imgs)
 
 
+def test_edge_service_non_proposed_pallas_spec_parity():
+    """The LUT Pallas kernel behind a full spec (wiring@width) serves
+    bit-identically to the direct pipeline — the service carries any
+    approx_pallas spec, not just the proposed@8 fast path."""
+    spec = "approx_pallas:design_strollo2020@4"
+    imgs = mixed_shape_batch(4, shapes=((8, 8), (12, 10)), seed=4)
+    svc = EdgeDetectService(spec, max_batch_size=2, max_wait_s=1e-3,
+                            bucket_granularity=8)
+    try:
+        outs = svc.detect(imgs)
+    finally:
+        svc.close()
+    assert svc.substrate.meta.cost_hint == "gather"
+    for im, out in zip(imgs, outs):
+        ref = np.asarray(conv.edge_detect_batched(im[None], spec))[0]
+        np.testing.assert_array_equal(out, ref, err_msg=f"{spec} {im.shape}")
+
+
 def test_edge_service_shape_bucket_isolation():
     """Images of different bucket shapes never share a flush."""
     svc = EdgeDetectService("exact", max_batch_size=8, max_wait_s=60.0,

@@ -233,8 +233,10 @@ def test_width_unsupported_backends_reject():
         sub.get_substrate("approx_lut:proposed@16")
     with pytest.raises(ValueError, match="separable error model"):
         sub.get_substrate("approx_stat:proposed@16")
-    with pytest.raises(ValueError, match="proposed closed form"):
-        sub.get_substrate("approx_pallas:proposed@4")
+    with pytest.raises(ValueError, match="enumerable product table"):
+        sub.get_substrate("approx_pallas:proposed@16")
+    # the LUT kernel serves narrow widths now (PR 4) — @4 must *succeed*
+    assert sub.get_substrate("approx_pallas:proposed@4").meta.width == 4
 
 
 def test_default_spec_width_is_8():
