@@ -1,10 +1,17 @@
 """Kernel micro-benchmarks (beyond paper): product-substrate sweep.
 
-Times the integer contraction (``dot_int8``) of every substrate registered
+Times the integer contraction (``dot_int``) of every substrate registered
 in ``repro.nn.substrate`` — no hand-maintained mode list — on CPU. Pallas
 substrates run in interpret mode here (wall-clock kernel numbers only mean
 something on real TPU); the XLA modes give the CPU-comparable throughput
 picture and the relative cost of bit-exact emulation.
+
+``sharded=True`` (``benchmarks.run --only kernel --sharded``) adds a
+``dot_general`` + ``Partitioning`` sweep over a debug mesh of every visible
+device (data-parallel M, reduce-scattered K) — the TPU-native benchmark run
+uses it to sweep sharded contractions; under
+``--xla_force_host_platform_device_count=N`` it exercises the same lowering
+on CPU.
 """
 from __future__ import annotations
 
@@ -27,7 +34,29 @@ def _time(f, *args, iters=5):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def run(substrates=None) -> list:
+def _sharded_rows(specs, a8, b8, macs) -> list:
+    """dot_general + Partitioning sweep over a debug mesh of all devices."""
+    from repro.launch import mesh as mesh_lib
+
+    rows = []
+    mesh = mesh_lib.make_debug_mesh()
+    part = mesh_lib.contraction_partitioning(mesh)
+    print(f"\n== kernel bench: sharded dot_general "
+          f"(mesh {dict(mesh.shape)}, m_axis={part.m_axis}, "
+          f"k_axis={part.k_axis}) ==")
+    for spec in specs:
+        s = sub.get_substrate(spec)
+        cspec = sub.ContractionSpec(partitioning=part)
+        f = jax.jit(lambda a, b, _s=s, _c=cspec: _s.dot_general(a, b, _c))
+        us = _time(f, a8, b8)
+        gmacs = macs / us / 1e3
+        print(f"{spec:>16s}: {us:10.0f} us  ({gmacs:6.2f} GMAC/s) [sharded]")
+        rows.append((f"kernel/sharded_{s.meta.label}", us,
+                     f"gmacs={gmacs:.2f};devices={mesh.size}"))
+    return rows
+
+
+def run(substrates=None, sharded=False) -> list:
     rows = []
     rng = np.random.default_rng(0)
     m, k, n = 256, 512, 256
@@ -38,13 +67,16 @@ def run(substrates=None) -> list:
     macs = m * k * n
     for spec in specs:
         s = sub.get_substrate(spec)
-        f = jax.jit(lambda a, b, _s=s: _s.dot_int8(a, b))
+        f = jax.jit(lambda a, b, _s=s: _s.dot_int(a, b))
         us = _time(f, a8, b8)
         gmacs = macs / us / 1e3
         note = " [interpret]" if s.meta.preferred_backend == "tpu" \
             and jax.default_backend() != "tpu" else ""
         print(f"{spec:>16s}: {us:10.0f} us  ({gmacs:6.2f} GMAC/s){note}")
         rows.append((f"kernel/matmul_{s.meta.label}", us, f"gmacs={gmacs:.2f}"))
+
+    if sharded:
+        rows.extend(_sharded_rows(specs, a8, b8, macs))
 
     # pallas × wiring × width sweep: the LUT-input kernel makes every
     # wiring TPU-runnable; proposed@8 rides the closed-form fast path
@@ -58,7 +90,7 @@ def run(substrates=None) -> list:
         for width in (4, 8):
             spec = f"approx_pallas:{wiring}@{width}"
             s = sub.get_substrate(spec)
-            f = jax.jit(lambda a, b, _s=s: _s.dot_int8(a, b))
+            f = jax.jit(lambda a, b, _s=s: _s.dot_int(a, b))
             us = _time(f, pa, pb)
             gmacs = pmacs / us / 1e3
             note = " [interpret]" if jax.default_backend() != "tpu" else ""

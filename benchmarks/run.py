@@ -2,8 +2,11 @@
 
 Prints a ``name,us_per_call,derived`` CSV at the end (plus human-readable
 tables as it goes). ``python -m benchmarks.run [--only table4]
-[--substrates exact,approx_pallas]`` — the substrate-sweep benches (fig9,
-kernel) default to every substrate registered in ``repro.nn.substrate``.
+[--substrates exact,approx_pallas] [--sharded]`` — the substrate-sweep
+benches (fig9, kernel) default to every substrate registered in
+``repro.nn.substrate``; ``--sharded`` adds the kernel bench's
+``dot_general`` + ``Partitioning`` rows (sweeps sharded contractions over a
+mesh of every visible device — the TPU-native run's sharded sweep).
 """
 from __future__ import annotations
 
@@ -44,6 +47,9 @@ def main() -> None:
     ap.add_argument("--substrates", default=None,
                     help="CSV of substrate specs for the sweep benches "
                          "(default: all registered)")
+    ap.add_argument("--sharded", action="store_true",
+                    help="add the kernel bench's sharded dot_general rows "
+                         "(Partitioning over a mesh of all visible devices)")
     args = ap.parse_args()
     substrates = args.substrates.split(",") if args.substrates else None
 
@@ -53,6 +59,8 @@ def main() -> None:
         if args.only and name != args.only:
             continue
         kwargs = {"substrates": substrates} if name in _SUBSTRATE_SWEEPS else {}
+        if name == "kernel":
+            kwargs["sharded"] = args.sharded
         try:
             rows.extend(mod.run(**kwargs))
         except Exception:  # noqa: BLE001

@@ -19,8 +19,12 @@ Per cell:
 
 Usage:
   python -m repro.launch.dryrun --arch minitron-8b --shape train_4k \
-      [--multi-pod] [--out results.json] [--dot-mode exact]
+      [--multi-pod] [--out results.json] [--dot-mode exact] [--dot-partition]
   python -m repro.launch.dryrun --all [--out results.json]
+
+--dot-partition lowers every dense() contraction through the substrate
+layer's shard_map Partitioning (data-parallel M over "data",
+reduce-scattered K over "model") — the mesh path for the approx substrates.
 """
 import argparse
 import dataclasses
@@ -80,15 +84,23 @@ def pick_optimizer(cfg):
 
 
 def lower_cell(arch: str, shape_name: str, multi_pod: bool,
-               dot_mode: str = "exact", donate: bool = True) -> Dict[str, Any]:
+               dot_mode: str = "exact", donate: bool = True,
+               dot_partition: bool = False) -> Dict[str, Any]:
+    from repro.nn import substrate as psub
+
     shape = reg.SHAPES[shape_name]
     cfg = reg.get_config(arch, dot_mode=dot_mode)
     bundle = reg._BUILDERS[cfg.family](cfg)
     mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
     n_dev = mesh.size
+    # --dot-partition: every dense() contraction lowers through shard_map
+    # (data-parallel M, reduce-scattered K) instead of leaving GSPMD to
+    # shard the substrate's scalar-emulation HLO — this is what lets
+    # approx_stat / approx_pallas dot modes ride the production mesh
+    part = mesh_lib.contraction_partitioning(mesh) if dot_partition else None
 
     t0 = time.time()
-    with mesh:
+    with mesh, psub.partitioning_scope(part):
         params_sds = reg.param_specs(bundle)
         import numpy as _np
         measured = sum(int(_np.prod(l.shape))
@@ -154,6 +166,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         arch=arch, shape=shape_name,
         mesh="2x16x16" if multi_pod else "16x16",
         n_devices=n_dev, kind=shape.kind, dot_mode=dot_mode,
+        dot_partition=dot_partition,
         params=measured, active_params=n_active,
         flops_per_device=rf.flops_per_device,
         bytes_per_device=rf.bytes_per_device,
@@ -168,21 +181,24 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     return result
 
 
-def run_cells(cells, out_path: str, dot_mode: str = "exact"):
+def run_cells(cells, out_path: str, dot_mode: str = "exact",
+              dot_partition: bool = False):
     results = []
     if out_path and os.path.exists(out_path):
         results = json.load(open(out_path))
-    done = {(r["arch"], r["shape"], r["mesh"], r.get("dot_mode", "exact"))
+    done = {(r["arch"], r["shape"], r["mesh"], r.get("dot_mode", "exact"),
+             r.get("dot_partition", False))
             for r in results if r.get("ok", True)}
     for arch, shape_name, multi_pod in cells:
         mesh_name = "2x16x16" if multi_pod else "16x16"
-        key = (arch, shape_name, mesh_name, dot_mode)
+        key = (arch, shape_name, mesh_name, dot_mode, dot_partition)
         if key in done:
             print(f"[skip] {key}")
             continue
         print(f"[dryrun] {arch} × {shape_name} × {mesh_name} ...", flush=True)
         try:
-            r = lower_cell(arch, shape_name, multi_pod, dot_mode=dot_mode)
+            r = lower_cell(arch, shape_name, multi_pod, dot_mode=dot_mode,
+                           dot_partition=dot_partition)
             r["ok"] = True
             print(f"  ok: flops/dev={r['flops_per_device']:.3e} "
                   f"coll={r['collective_bytes']:.3e}B "
@@ -221,6 +237,10 @@ def main():
     ap.add_argument("--all", action="store_true", help="every (arch × shape)")
     ap.add_argument("--out", default="")
     ap.add_argument("--dot-mode", default="exact")
+    ap.add_argument("--dot-partition", action="store_true",
+                    help="lower substrate contractions through shard_map "
+                         "(data-parallel M over 'data', reduce-scattered K "
+                         "over 'model') instead of GSPMD auto-sharding")
     args = ap.parse_args()
 
     if args.all:
@@ -232,7 +252,8 @@ def main():
         cells = [(args.arch, args.shape, args.multi_pod)]
         if args.both_meshes:
             cells = [(args.arch, args.shape, False), (args.arch, args.shape, True)]
-    results = run_cells(cells, args.out, dot_mode=args.dot_mode)
+    results = run_cells(cells, args.out, dot_mode=args.dot_mode,
+                        dot_partition=args.dot_partition)
     ok = sum(1 for r in results if r.get("ok"))
     print(f"\n{ok}/{len(results)} cells ok")
     if not args.out:

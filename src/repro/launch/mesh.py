@@ -33,6 +33,22 @@ def make_debug_mesh(n_devices: Optional[int] = None) -> Mesh:
     return jax.make_mesh((n // model, model), ("data", "model"))
 
 
+def contraction_partitioning(mesh: Mesh, *, m_axis: str = "data",
+                             k_axis: Optional[str] = "model"):
+    """Substrate :class:`~repro.nn.substrate.Partitioning` for this mesh.
+
+    Data-parallel M over ``m_axis``, reduce-scattered K over ``k_axis``.
+    An axis missing from the mesh is dropped (a data-only debug mesh still
+    works, k-sharding simply off); multi-pod meshes keep M on the single
+    data axis — the "pod" axis stays pure batch parallelism.
+    """
+    from repro.nn import substrate as psub
+
+    m = m_axis if m_axis in mesh.axis_names else None
+    k = k_axis if (k_axis and k_axis in mesh.axis_names) else None
+    return psub.Partitioning(mesh, m_axis=m, k_axis=k)
+
+
 # ---------------------------------------------------------------------------
 # name-based parameter sharding rules
 # ---------------------------------------------------------------------------

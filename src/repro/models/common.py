@@ -130,14 +130,25 @@ class ModelConfig:
 # ---------------------------------------------------------------------------
 
 
+#: dense()'s quantization boundary: the historical `dot` policy (per-tensor
+#: dynamic activation scale, per-output-channel weight scales).
+_DENSE_QUANT = psub.QuantPolicy()
+
+
 def dense(cfg: ModelConfig, x: Array, w: Array, b: Optional[Array] = None) -> Array:
     """Matmul under the configured product substrate (the paper's technique).
 
     ``cfg.dot_mode`` is a substrate spec; resolution is an lru-cached dict
     lookup, so per-call overhead is negligible and bundles can also resolve
-    it once at build time (``registry.build_bundle``).
+    it once at build time (``registry.build_bundle``). The contraction runs
+    through ``dot_general`` with the default quantization policy; when a
+    :func:`repro.nn.substrate.partitioning_scope` is active (the launch
+    layer's ``--dot-partition`` mesh path), the contraction lowers through
+    shard_map instead of relying on GSPMD to shard the scalar-emulation HLO.
     """
-    out = psub.get_substrate(cfg.dot_mode).dot(x, w)
+    spec = psub.ContractionSpec.matmul(
+        quant=_DENSE_QUANT, partitioning=psub.current_partitioning())
+    out = psub.get_substrate(cfg.dot_mode).dot_general(x, w, spec)
     if b is not None:
         out = out + b.astype(out.dtype)
     return out

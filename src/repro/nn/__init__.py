@@ -6,7 +6,10 @@ approx_bitexact, approx_lut, approx_stat, approx_pallas).
 """
 from repro.nn import approx_dot, conv, quant, substrate  # noqa: F401
 from repro.nn.substrate import (  # noqa: F401
+    ContractionSpec,
+    Partitioning,
     ProductSubstrate,
+    QuantPolicy,
     SubstrateMeta,
     get_substrate,
     list_substrates,

@@ -2,18 +2,20 @@
 
 Thin compatibility layer over :mod:`repro.nn.substrate` — all product-mode
 selection goes through the :class:`~repro.nn.substrate.ProductSubstrate`
-registry; this module keeps the historical function signatures.
+registry; this module keeps the historical function signatures and adds a
+spec-string front door for the ``dot_general`` contraction surface.
 
 Execution modes (= registered substrates, selectable per layer / per config):
 
 * ``exact``          — plain dot in the compute dtype (fp reference).
 * ``int8``           — symmetric int8 quantization, exact int32 matmul.
-* ``approx_bitexact``— int8 quantization, every scalar product evaluated with
-                       the paper's multiplier closed form. Bit-identical to
-                       the hardware netlist; O(M·K·N) scalar-product work, for
-                       validation / small models / the edge-detection app.
-* ``approx_lut``     — same contraction through the 256×256 product LUT
-                       (gather-based; asserted equal to approx_bitexact).
+* ``approx_bitexact``— width-N quantization, every scalar product evaluated
+                       with the paper's multiplier closed form. Bit-identical
+                       to the hardware netlist; O(M·K·N) scalar-product work,
+                       for validation / small models / the edge-detection app.
+* ``approx_lut``     — same contraction through the (2^N)² product LUT
+                       (gather-based; asserted equal to approx_bitexact;
+                       256×256 at the default N=8).
 * ``approx_stat``    — exact int32 matmul + *separable statistical error
                        model*: E[e(a,b)] ≈ r[a] + c[b] − µ. MXU-friendly
                        deployment-scale stand-in. Beyond-paper contribution.
@@ -29,13 +31,20 @@ A mode string may carry a multiplier wiring + width suffix
 :func:`repro.nn.substrate.get_substrate` for the full
 ``backend[:mult_name[@N]]`` grammar.
 
-NOTE: the approximate multiplier maps (0,0) → +192 (compensation constant
-fires regardless of operands — true to the netlist), so padded/zero entries
-still contribute; the substrates' contraction helpers mask accordingly.
+Naming note: :func:`approx_matmul_int` is the canonical integer-contraction
+entry point — operands are int8 at widths ≤ 8 but int16 at wider widths, so
+the historical ``approx_matmul_int8`` name survives only as a deprecated
+alias (same for ``ProductSubstrate.dot_int`` vs ``dot_int8``).
+
+NOTE: the approximate multiplier maps (0,0) → +compensation_constant(N)
+(the constant fires regardless of operands — true to the netlist; +192 at
+the default N=8), so padded/zero entries still contribute; the substrates'
+contraction helpers mask accordingly — including per K-shard when a
+:class:`~repro.nn.substrate.Partitioning` shards the contraction dim.
 """
 from __future__ import annotations
 
-from typing import Literal
+from typing import Literal, Optional
 
 import jax.numpy as jnp
 
@@ -46,13 +55,36 @@ Mode = Literal["exact", "int8", "approx_bitexact", "approx_lut",
                "approx_stat", "approx_pallas"]
 
 
-def approx_matmul_int8(a8: Array, b8: Array, mode: Mode = "approx_bitexact",
+def approx_dot_general(x: Array, w: Array,
+                       spec: "Optional[sub.ContractionSpec]" = None,
+                       mode: Mode = "exact",
                        mult_name: str | None = None) -> Array:
-    """Integer-domain contraction of int8 operands under the chosen mode.
+    """General contraction under the chosen mode (spec-string front door).
 
+    ``spec`` is a :class:`~repro.nn.substrate.ContractionSpec` — dimension
+    numbers, :class:`~repro.nn.substrate.QuantPolicy`, and
+    :class:`~repro.nn.substrate.Partitioning`; None means plain integer
+    matmul dims. mult_name defaults to the mode string's suffix, else
+    ``"proposed"``.
+    """
+    return sub.get_substrate(mode, mult_name=mult_name).dot_general(x, w, spec)
+
+
+def approx_matmul_int(a: Array, b: Array, mode: Mode = "approx_bitexact",
+                      mult_name: str | None = None) -> Array:
+    """Integer-domain (M,K)@(K,N) contraction under the chosen mode.
+
+    Operands are int8 at widths ≤ 8, int16 at wider widths.
     mult_name defaults to the mode string's suffix, else ``"proposed"``.
     """
-    return sub.get_substrate(mode, mult_name=mult_name).dot_int8(a8, b8)
+    return sub.get_substrate(mode, mult_name=mult_name).dot_int(a, b)
+
+
+def approx_matmul_int8(a8: Array, b8: Array, mode: Mode = "approx_bitexact",
+                       mult_name: str | None = None) -> Array:
+    """Deprecated alias of :func:`approx_matmul_int` (the ``int8`` name was
+    a lie at N=16, where operands are int16)."""
+    return approx_matmul_int(a8, b8, mode=mode, mult_name=mult_name)
 
 
 def approx_dot(x: Array, w: Array, mode: Mode = "exact",
@@ -60,7 +92,8 @@ def approx_dot(x: Array, w: Array, mode: Mode = "exact",
     """``x @ w`` with the paper's multiplier as the scalar-product unit.
 
     x: (..., K) activations (any float dtype); w: (K, N) weights.
-    Activations use a per-tensor dynamic scale; weights per-output-channel.
-    Returns the result in x's dtype.
+    Activations use a per-tensor dynamic scale; weights per-output-channel
+    (= ``dot_general`` with the default ``QuantPolicy``). Returns the
+    result in x's dtype.
     """
     return sub.get_substrate(mode, mult_name=mult_name).dot(x, w)

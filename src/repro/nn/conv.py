@@ -86,17 +86,26 @@ def _im2col(imgs: Array, kh: int, kw: int) -> Array:
     return jnp.stack(cols, axis=-1)
 
 
+# im2col patches are (B, H, W, taps); contract the tap axis with the
+# flattened kernel — dot_general handles the free dims, no hand 2-D reshape
+_CONV_DIMS = (((3,), (0,)), ((), ()))
+
+
 def conv2d_batched(imgs: Array, kernel: Array,
-                   substrate: "str | object" = "approx_bitexact") -> Array:
+                   substrate: "str | object" = "approx_bitexact",
+                   partitioning=None) -> Array:
     """Batched 'same' integer convolution via im2col + substrate contraction.
 
     imgs: (B, H, W) or NHWC (B, H, W, C) int32 in [-128, 127] (channels are
     convolved independently with the same kernel); kernel: (kh, kw) int32.
-    substrate: spec string or ProductSubstrate; the contraction runs through
-    ``substrate.dot_int8`` so the whole batch is one (B·H·W(·C), kh·kw) @
-    (kh·kw, 1) matmul — MXU/Pallas-friendly instead of a Python tap loop.
-    Accumulation is exact int32; f(0,0) padding artifacts of the contraction
-    are corrected inside the substrates. Returns int32 of imgs' shape.
+    substrate: spec string or ProductSubstrate; the contraction is one
+    ``substrate.dot_general`` over the (B, H, W, kh·kw) tap patches —
+    MXU/Pallas-friendly instead of a Python tap loop. Accumulation is exact
+    int32; f(0,0) padding artifacts of the contraction are corrected inside
+    the substrates. ``partitioning``: optional
+    :class:`repro.nn.substrate.Partitioning` — shards the contraction
+    through shard_map (bit-identical for bit-exact substrates). Returns
+    int32 of imgs' shape.
     """
     from repro.nn import substrate as sub
 
@@ -108,12 +117,11 @@ def conv2d_batched(imgs: Array, kernel: Array,
         imgs = imgs.transpose(0, 3, 1, 2).reshape(b * c, h, w)
     if imgs.ndim != 3:
         raise ValueError(f"imgs must be (B,H,W) or (B,H,W,C); got {imgs.shape}")
-    bb, h, w = imgs.shape
     kernel = jnp.asarray(kernel, jnp.int32)
     kh, kw = kernel.shape
-    patches = _im2col(imgs, kh, kw).reshape(bb * h * w, kh * kw)
-    acc = s.dot_int8(patches, kernel.reshape(kh * kw, 1))
-    out = acc.reshape(bb, h, w)
+    patches = _im2col(imgs, kh, kw)  # (B, H, W, kh·kw)
+    spec = sub.ContractionSpec(_CONV_DIMS, partitioning=partitioning)
+    out = s.dot_general(patches, kernel.reshape(kh * kw, 1), spec)[..., 0]
     if nhwc:
         out = out.reshape(b, c, h, w).transpose(0, 2, 3, 1)
     return out
@@ -133,7 +141,8 @@ def edge_detect(img_u8: Array, mult_name: str = "proposed") -> Array:
 
 
 def edge_detect_batched(imgs_u8: Array,
-                        substrate: "str | object" = "approx_bitexact") -> Array:
+                        substrate: "str | object" = "approx_bitexact",
+                        partitioning=None) -> Array:
     """Laplacian edge maps for a whole batch under one substrate.
 
     imgs_u8: (B, H, W) uint8. substrate: spec string (may carry a wiring +
@@ -141,7 +150,9 @@ def edge_detect_batched(imgs_u8: Array,
     ``"approx_lut:csp_axc1@4"``) or ProductSubstrate. Pixels are mapped
     into the substrate's operand width and the response rescaled back to
     the 8-bit output range. Per-image outputs are bit-identical to
-    :func:`edge_detect` for every scalar-faithful substrate. Returns
+    :func:`edge_detect` for every scalar-faithful substrate — including
+    under a :class:`repro.nn.substrate.Partitioning` (the sharded
+    contraction stays bit-identical for bit-exact substrates). Returns
     (B, H, W) uint8.
     """
     from repro.nn import substrate as sub
@@ -149,7 +160,8 @@ def edge_detect_batched(imgs_u8: Array,
     s = sub.as_substrate(substrate)
     n = getattr(s.meta, "width", 8)
     px = to_signed_pixels(imgs_u8, n)
-    raw = conv2d_batched(px, jnp.asarray(LAPLACIAN), s)
+    raw = conv2d_batched(px, jnp.asarray(LAPLACIAN), s,
+                         partitioning=partitioning)
     return jnp.clip(_rescale_raw(raw, n), 0, 255).astype(jnp.uint8)
 
 

@@ -44,20 +44,24 @@ class Quantized:
         return self.values.astype(jnp.float32) * self.scale
 
 
-def _absmax(x: Array, axes: Sequence[int] | None) -> Array:
+def _absmax(x: Array, axes: Sequence[int] | None, eps: float = 1e-8) -> Array:
+    """Epsilon-guarded absmax: an all-zero tensor yields ``eps``, not 0, so
+    the derived scale stays finite and zero tensors quantize to exact zeros
+    instead of NaN (0/0)."""
     m = jnp.max(jnp.abs(x), axis=axes, keepdims=True) if axes is not None else jnp.max(jnp.abs(x))
-    return jnp.maximum(m.astype(jnp.float32), 1e-8)
+    return jnp.maximum(m.astype(jnp.float32), eps)
 
 
 def quantize(x: Array, axes: Sequence[int] | None = None,
-             bits: int = 8) -> Quantized:
+             bits: int = 8, eps: float = 1e-8) -> Quantized:
     """Symmetric absmax quantization to signed ``bits``-wide integers.
 
     axes: reduction axes for the scale (None = per-tensor). E.g. for a weight
     of shape (in, out), ``axes=(0,)`` gives a per-output-channel scale.
+    eps: degenerate-scale guard (see ``_absmax``).
     """
     m = qmax(bits)
-    scale = _absmax(x, axes) / m
+    scale = _absmax(x, axes, eps) / m
     q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -m, m)
     return Quantized(q.astype(storage_dtype(bits)), scale)
 

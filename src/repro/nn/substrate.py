@@ -4,17 +4,30 @@ The paper's thesis is that a single scalar-product unit — the sign-focused-
 compressor approximate multiplier — can be swapped underneath convolution and
 matmul workloads. This module makes that swap a first-class object instead of
 stringly-typed ``if mode == ...`` chains: a :class:`ProductSubstrate` bundles
-the three contraction capabilities every workload needs
+one ``dot_general``-style contraction entry point
+
+* ``dot_general(x, w, spec)`` — the single contraction surface. A
+  :class:`ContractionSpec` carries (i) jax-style *dimension numbers*
+  (batched/transposed contractions without hand reshapes), (ii) an optional
+  :class:`QuantPolicy` (the float→intN quantization boundary: per-tensor vs
+  per-channel scales, width, pinned scales), and (iii) an optional
+  :class:`Partitioning` (mesh + axis names) that lowers the contraction
+  through ``shard_map`` — data-parallel M, reduce-scattered K — while
+  staying bit-identical to the unsharded path for every bit-exact backend,
+
+plus the raw product model and thin compatibility wrappers
 
 * ``scalar(a, b)``   — the raw intN×intN→int32 product model,
-* ``dot_int8(a, b)`` — integer-domain (M,K)@(K,N) contraction (exact adder;
-                       the name is historical — operands are int8 for widths
-                       ≤ 8 and int16 for wider),
-* ``dot(x, w)``      — float-domain matmul through the int-N quantization
-                       boundary (per-tensor activations, per-channel weights),
-* ``conv2d(imgs,k)`` — batched NHW(C) 'same' convolution via im2col + dot,
+* ``dot_int(a, b)``  — 2-D integer-domain (M,K)@(K,N) contraction (exact
+                       adder; operands are int8 for widths ≤ 8, int16 wider),
+* ``dot_int8``       — deprecated alias of ``dot_int`` (the name was a lie
+                       at N=16),
+* ``dot(x, w)``      — deprecated wrapper: ``dot_general`` with the default
+                       matmul dims + default ``QuantPolicy``,
+* ``conv2d(imgs,k)`` — batched NHW(C) 'same' convolution via im2col +
+                       ``dot_general``,
 
-plus :class:`SubstrateMeta` (bit-exactness, operand width, preferred
+and :class:`SubstrateMeta` (bit-exactness, operand width, preferred
 backend, cost hints) so launchers/benchmarks can reason about a substrate
 without running it.
 
@@ -50,7 +63,7 @@ multiplier wiring, and an operand width at once:
 Width contract: ``meta.width`` is the operand width N. Integer operands
 outside the signed N-bit range are **wrapped** (low N bits, sign-extended)
 by every approx backend, so bitexact/LUT stay bit-identical on arbitrary
-ints; the float ``dot`` path quantizes into range so wrapping never fires.
+ints; the float path quantizes into range so wrapping never fires.
 N=4 and N=8 models are exhaustively verified against the structural netlist
 model in tests; N=16 is verified on random samples.
 
@@ -59,18 +72,26 @@ runs without x64 here), i.e. sums are exact until they exceed ±2^31 and
 wrap mod 2^32 beyond that. At N ≤ 8 no realistic K overflows; at N=16 the
 worst-case product is ~2^30, so keep K·|products| below 2^31 (edge-detection
 taps and quantized convs do) — ``scalar_faithful`` parity is defined modulo
-2^32.
+2^32. int32 addition is exact and associative under that modulus, which is
+why the sharded (psum / psum_scatter) reduction order cannot perturb
+bit-exact backends.
 
 NOTE: the approximate multiplier maps (0,0) → +compensation_constant(N)
 (the constant fires regardless of operands — true to the netlist; +192 at
 N=8), so zero padding of the contraction dimension injects spurious
-contributions; every backend corrects for f(0,0) where it pads.
+contributions; every backend corrects for f(0,0) where it pads — including
+per K-shard under a :class:`Partitioning`, where each shard corrects its
+own local k-chunk padding and the global shard-divisibility pad is
+corrected once after the reduce.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
-from typing import Callable, Dict, NamedTuple, Protocol, runtime_checkable
+import threading
+from typing import Callable, Dict, NamedTuple, Optional, Protocol, Tuple, \
+    runtime_checkable
 
 import jax
 import jax.numpy as jnp
@@ -96,7 +117,7 @@ class SubstrateMeta:
 
     bit_exact:        product values are bit-identical to the hardware netlist
                       (exact backends are trivially bit-exact to *their* model).
-    scalar_faithful:  ``dot_int8(a, b) == Σ_k scalar(a_k, b_k)`` exactly —
+    scalar_faithful:  ``dot_int(a, b) == Σ_k scalar(a_k, b_k)`` exactly —
                       holds for everything except the statistical error model,
                       which is defined at contraction level (one rounding of
                       the separable correction per output element).
@@ -137,17 +158,306 @@ class SubstrateMeta:
 
 @runtime_checkable
 class ProductSubstrate(Protocol):
-    """Anything with the four contraction capabilities + metadata."""
+    """Anything with the ``dot_general`` contraction surface + metadata.
+
+    ``dot_int8`` / ``dot`` / ``conv2d`` are thin deprecated wrappers kept
+    for signature stability — every one routes through ``dot_general``.
+    """
 
     meta: SubstrateMeta
 
     def scalar(self, a: Array, b: Array) -> Array: ...
 
-    def dot_int8(self, a8: Array, b8: Array) -> Array: ...
+    def dot_general(self, x: Array, w: Array,
+                    spec: "Optional[ContractionSpec]" = None) -> Array: ...
 
-    def dot(self, x: Array, w: Array) -> Array: ...
+    def dot_int(self, a: Array, b: Array) -> Array: ...
+
+    def dot_int8(self, a8: Array, b8: Array) -> Array: ...  # deprecated alias
+
+    def dot(self, x: Array, w: Array) -> Array: ...         # deprecated wrapper
 
     def conv2d(self, imgs: Array, kernel: Array) -> Array: ...
+
+
+# ---------------------------------------------------------------------------
+# Contraction policies: dimension numbers + quantization + partitioning
+# ---------------------------------------------------------------------------
+
+#: jax ``dot_general``-style dimension numbers:
+#: ``((lhs_contracting, rhs_contracting), (lhs_batch, rhs_batch))``.
+#: Negative axes are allowed (normalized per operand rank).
+DimensionNumbers = Tuple[Tuple[Tuple[int, ...], Tuple[int, ...]],
+                         Tuple[Tuple[int, ...], Tuple[int, ...]]]
+
+#: Plain matmul dims: contract the last lhs axis with the first rhs axis —
+#: valid for any lhs rank (the historical ``dot(x, w)`` shape contract).
+MATMUL_DIMS: DimensionNumbers = (((-1,), (0,)), ((), ()))
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantPolicy:
+    """Float→intN quantization boundary policy for ``dot_general``.
+
+    Extracted from the historical ``dot`` so callers can vary (or pin) the
+    policy per call site instead of inheriting one hard-coded choice.
+
+    bits:     operand width to quantize to (None → the substrate's
+              ``meta.width``; must not exceed it — wider codes would wrap in
+              the narrower multiplier).
+    x_mode:   activation scale granularity — ``"per_tensor"`` (one dynamic
+              scalar scale, the historical default) or ``"per_channel"``
+              (one scale per output row, i.e. per flattened lhs free
+              element).
+    w_mode:   weight scale granularity — ``"per_channel"`` (one scale per
+              flattened rhs free element, the historical default) or
+              ``"per_tensor"``.
+    x_scale / w_scale:
+              pinned scales. When set, the dynamic absmax computation is
+              skipped and values quantize as ``round(v / scale)`` — this is
+              how callers reuse one calibrated scale across many calls.
+              Shapes broadcast against the *normalized* operand layouts:
+              lhs ``(B, M, 1)`` and rhs ``(B, 1, N)`` (scalar, ``(N,)`` etc.
+              all work for the plain-matmul dims).
+    eps:      epsilon guard for the dynamic scale: ``scale =
+              max(absmax, eps) / qmax``. Keeps all-zero operand tensors
+              from producing a 0/0 scale — a zero tensor quantizes to
+              zeros under a tiny-but-finite scale, so downstream output is
+              exactly representable zero, not NaN.
+    """
+
+    bits: Optional[int] = None
+    x_mode: str = "per_tensor"
+    w_mode: str = "per_channel"
+    x_scale: Optional[Array] = None
+    w_scale: Optional[Array] = None
+    eps: float = 1e-8
+
+    def __post_init__(self):
+        for field_name, mode in (("x_mode", self.x_mode),
+                                 ("w_mode", self.w_mode)):
+            if mode not in ("per_tensor", "per_channel"):
+                raise ValueError(
+                    f"QuantPolicy.{field_name} must be 'per_tensor' or "
+                    f"'per_channel', got {mode!r}")
+        if self.bits is not None and not (2 <= self.bits <= 16):
+            raise ValueError(
+                f"QuantPolicy.bits must be in [2, 16], got {self.bits}")
+        if self.eps <= 0:
+            raise ValueError(f"QuantPolicy.eps must be > 0, got {self.eps}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Partitioning:
+    """Mesh lowering policy: shard the contraction through ``shard_map``.
+
+    m_axis: mesh axis carrying data-parallel output rows (the flattened lhs
+            free dims). Rows pad up to the axis size and crop after.
+    k_axis: mesh axis the contraction dim is reduce-scattered over. Each
+            shard contracts its K slice locally (every backend's own
+            per-shard f(0,0) k-padding correction applies *inside* the
+            shard), then partial sums combine with an int32 psum_scatter
+            (psum when N doesn't divide the axis). int32 addition is exact,
+            so bit-exact backends stay bit-identical to the unsharded path
+            regardless of reduction order. When K doesn't divide the axis
+            size, the global zero-pad is corrected once with the wiring's
+            f(0,0) after the reduce — only possible for scalar-faithful
+            substrates (``approx_stat`` requires divisible K).
+
+    ``approx_stat`` caveat: its separable correction rounds once per shard
+    instead of once globally, so sharded results may differ from unsharded
+    by the per-shard truncation (the backend is not bit_exact to begin
+    with).
+    """
+
+    mesh: jax.sharding.Mesh
+    m_axis: Optional[str] = "data"
+    k_axis: Optional[str] = None
+
+    def __post_init__(self):
+        if self.m_axis is None and self.k_axis is None:
+            raise ValueError(
+                "Partitioning needs at least one of m_axis / k_axis")
+        for ax in (self.m_axis, self.k_axis):
+            if ax is not None and ax not in self.mesh.axis_names:
+                raise ValueError(
+                    f"Partitioning axis {ax!r} is not a mesh axis "
+                    f"(mesh has {self.mesh.axis_names})")
+        if self.m_axis is not None and self.m_axis == self.k_axis:
+            raise ValueError(
+                f"m_axis and k_axis must differ, both are {self.m_axis!r}")
+
+    @property
+    def m_shards(self) -> int:
+        return int(self.mesh.shape[self.m_axis]) if self.m_axis else 1
+
+    @property
+    def k_shards(self) -> int:
+        return int(self.mesh.shape[self.k_axis]) if self.k_axis else 1
+
+
+@dataclasses.dataclass(frozen=True)
+class ContractionSpec:
+    """Everything ``dot_general`` needs beyond the two operands.
+
+    dimension_numbers: jax ``dot_general`` style (negative axes allowed).
+                       Output layout matches ``jax.lax.dot_general``:
+                       ``(batch..., lhs_free..., rhs_free...)``.
+    quant:             None → integer-domain contraction (operands must be
+                       integers); a :class:`QuantPolicy` → float operands
+                       through the quantization boundary.
+    partitioning:      None → single-device contraction; a
+                       :class:`Partitioning` → lowered through shard_map.
+    """
+
+    dimension_numbers: DimensionNumbers = MATMUL_DIMS
+    quant: Optional[QuantPolicy] = None
+    partitioning: Optional[Partitioning] = None
+
+    @staticmethod
+    def matmul(quant: Optional[QuantPolicy] = None,
+               partitioning: Optional[Partitioning] = None
+               ) -> "ContractionSpec":
+        """Plain ``(…, K) @ (K, N)`` spec (the historical ``dot`` shape)."""
+        return ContractionSpec(MATMUL_DIMS, quant, partitioning)
+
+
+# -- ambient partitioning (opt-in mesh lowering for deep call sites) --------
+
+_PART_STATE = threading.local()
+
+
+def current_partitioning() -> Optional[Partitioning]:
+    """The ambient :class:`Partitioning` installed by
+    :func:`partitioning_scope`, or None. Read at *trace* time by call sites
+    that cannot thread a spec explicitly (``models.common.dense``)."""
+    return getattr(_PART_STATE, "value", None)
+
+
+@contextlib.contextmanager
+def partitioning_scope(p: Optional[Partitioning]):
+    """Install an ambient Partitioning for the duration of the block.
+
+    Used by the launch layer (``repro.launch.dryrun --dot-partition``) to
+    lower every model ``dense`` contraction through shard_map without
+    threading a spec through the whole model zoo. ``None`` is a no-op scope.
+    """
+    prev = getattr(_PART_STATE, "value", None)
+    _PART_STATE.value = p
+    try:
+        yield p
+    finally:
+        _PART_STATE.value = prev
+
+
+# ---------------------------------------------------------------------------
+# Dimension-number normalization + contraction planning
+# ---------------------------------------------------------------------------
+
+
+def _norm_axes(axes, ndim: int, what: str) -> Tuple[int, ...]:
+    out = []
+    for d in axes:
+        d = int(d)
+        if not -ndim <= d < ndim:
+            raise ValueError(
+                f"{what} dimension {d} out of range for rank-{ndim} operand")
+        out.append(d % ndim)
+    if len(set(out)) != len(out):
+        raise ValueError(f"duplicate {what} dimensions: {tuple(axes)}")
+    return tuple(out)
+
+
+class _Plan(NamedTuple):
+    """Precomputed transposes/reshapes taking arbitrary dimension numbers to
+    the canonical batched 2-D form ``(B, M, K) @ (B, K, N) -> (B, M, N)``."""
+
+    dims: DimensionNumbers          # normalized (non-negative) numbers
+    lhs_perm: Tuple[int, ...]
+    rhs_perm: Tuple[int, ...]
+    b: int
+    m: int
+    k: int
+    n: int
+    out_shape: Tuple[int, ...]
+
+    def lhs3(self, x: Array) -> Array:
+        return x.transpose(self.lhs_perm).reshape(self.b, self.m, self.k)
+
+    def rhs3(self, w: Array) -> Array:
+        return w.transpose(self.rhs_perm).reshape(self.b, self.k, self.n)
+
+    def unflatten(self, out3: Array) -> Array:
+        return out3.reshape(self.out_shape)
+
+
+def _plan_contraction(lhs_shape, rhs_shape,
+                      dimension_numbers: DimensionNumbers) -> _Plan:
+    try:
+        (lc, rc), (lb, rb) = dimension_numbers
+    except (TypeError, ValueError) as e:
+        raise ValueError(
+            "dimension_numbers must be ((lhs_contracting, rhs_contracting), "
+            f"(lhs_batch, rhs_batch)); got {dimension_numbers!r}") from e
+    lnd, rnd = len(lhs_shape), len(rhs_shape)
+    lc = _norm_axes(lc, lnd, "lhs contracting")
+    rc = _norm_axes(rc, rnd, "rhs contracting")
+    lb = _norm_axes(lb, lnd, "lhs batch")
+    rb = _norm_axes(rb, rnd, "rhs batch")
+    if len(lc) != len(rc) or len(lb) != len(rb):
+        raise ValueError(
+            f"contracting/batch dimension lists must pair up: "
+            f"lhs {lc}/{lb} vs rhs {rc}/{rb}")
+    if set(lc) & set(lb) or set(rc) & set(rb):
+        raise ValueError(
+            "a dimension cannot be both contracting and batch: "
+            f"lhs {lc}∩{lb}, rhs {rc}∩{rb}")
+    for dl, dr in zip(lc, rc):
+        if lhs_shape[dl] != rhs_shape[dr]:
+            raise ValueError(
+                f"contracting dimension mismatch: lhs dim {dl} has size "
+                f"{lhs_shape[dl]}, rhs dim {dr} has size {rhs_shape[dr]}")
+    for dl, dr in zip(lb, rb):
+        if lhs_shape[dl] != rhs_shape[dr]:
+            raise ValueError(
+                f"batch dimension mismatch: lhs dim {dl} has size "
+                f"{lhs_shape[dl]}, rhs dim {dr} has size {rhs_shape[dr]}")
+    lfree = tuple(d for d in range(lnd) if d not in lc and d not in lb)
+    rfree = tuple(d for d in range(rnd) if d not in rc and d not in rb)
+    prod = lambda dims, shape: int(np.prod([shape[d] for d in dims],
+                                           dtype=np.int64)) if dims else 1
+    out_shape = tuple([lhs_shape[d] for d in lb]
+                      + [lhs_shape[d] for d in lfree]
+                      + [rhs_shape[d] for d in rfree])
+    return _Plan(
+        dims=((lc, rc), (lb, rb)),
+        lhs_perm=lb + lfree + lc,
+        rhs_perm=rb + rc + rfree,
+        b=prod(lb, lhs_shape), m=prod(lfree, lhs_shape),
+        k=prod(lc, lhs_shape), n=prod(rfree, rhs_shape),
+        out_shape=out_shape,
+    )
+
+
+def _quantize_operand(t3: Array, mode: str, pinned_scale, contract_axis: int,
+                      bits: int, eps: float):
+    """Quantize a normalized ``(B, ·, ·)`` operand per the policy.
+
+    Returns (int values in the width's storage dtype, f32 scale). The
+    dynamic branch is ``quant.quantize`` — whose scale is epsilon-guarded:
+    an all-zero tensor gets a tiny finite scale, so its quantized values
+    and the dequantized output are exactly zero instead of NaN (regression:
+    zero image → zero edge map through the float path). A pinned scale
+    skips the absmax and quantizes as ``round(v / scale)``.
+    """
+    if pinned_scale is None:
+        axes = None if mode == "per_tensor" else (contract_axis,)
+        q = quant.quantize(t3, axes=axes, bits=bits, eps=eps)
+        return q.values, q.scale
+    qm = quant.qmax(bits)
+    scale = jnp.asarray(pinned_scale, jnp.float32)
+    q = jnp.clip(jnp.round(t3.astype(jnp.float32) / scale), -qm, qm)
+    return q.astype(quant.storage_dtype(bits)), scale
 
 
 # ---------------------------------------------------------------------------
@@ -208,52 +518,190 @@ def _exact_int_matmul(a8: Array, b8: Array) -> Array:
     )
 
 
+def _sharded_dot(local_dot, a: Array, b: Array, part: Partitioning,
+                 k_pad_unit: Optional[int]) -> Array:
+    """(M,K)@(K,N) through shard_map: one lowering for int and float.
+
+    Data-parallel M over ``part.m_axis``; K reduce-scattered over
+    ``part.k_axis`` — each shard runs ``local_dot`` on its K slice (a
+    substrate's own per-shard f(0,0) k-chunk-padding correction applies
+    locally inside it), then partial sums combine via psum_scatter over the
+    output's N dim when it divides the axis, plain psum otherwise (the
+    output stays replicated over k). ``k_pad_unit`` is what one zero-padded
+    K element contributes to every output (the wiring's f(0,0) for approx
+    models, 0 for exact paths): global shard-divisibility zero-padding of K
+    is corrected once with it after the reduce; None means no such
+    correction exists, so non-divisible K must raise before calling here.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    m, k = a.shape
+    _, n = b.shape
+    pm = (-m) % part.m_shards
+    pk = (-k) % part.k_shards
+    assert not (pk and k_pad_unit is None), "caller must reject this"
+    if pm or pk:
+        a = jnp.pad(a, ((0, pm), (0, pk)))
+    if pk:
+        b = jnp.pad(b, ((0, pk), (0, 0)))
+    scatter = part.k_axis is not None and n % part.k_shards == 0
+
+    def body(al, bl):
+        out = local_dot(al, bl)
+        if part.k_axis is not None:
+            if scatter:
+                out = jax.lax.psum_scatter(out, part.k_axis,
+                                           scatter_dimension=1, tiled=True)
+            else:
+                out = jax.lax.psum(out, part.k_axis)
+        return out
+
+    out = shard_map(
+        body, mesh=part.mesh,
+        in_specs=(P(part.m_axis, part.k_axis), P(part.k_axis, None)),
+        out_specs=P(part.m_axis, part.k_axis if scatter else None),
+        check_rep=False,
+    )(a, b)
+    if pk and k_pad_unit:
+        out = out - k_pad_unit * pk
+    return out[:m] if pm else out
+
+
+def _sharded_dot_int(substrate: "_SubstrateBase", a: Array, b: Array,
+                     part: Partitioning) -> Array:
+    """Integer ``_sharded_dot``: exact int32 reduce, f(0,0) pad unit."""
+    k = a.shape[1]
+    if substrate._f00 is None and k % part.k_shards:
+        raise ValueError(
+            f"{substrate.meta.spec}: K={k} must be a multiple of the k_axis "
+            f"size ({part.k_shards}) — this substrate's correction is defined "
+            "at contraction level (scalar_faithful=False), so the k-pad "
+            "f(0,0) fix-up does not apply; pad K yourself or drop k_axis")
+    return _sharded_dot(substrate.dot_int, a, b, part, substrate._f00)
+
+
+def _sharded_dot_float(a: Array, b: Array, part: Partitioning) -> Array:
+    """Float ``_sharded_dot`` (exact backend's mesh path): zero k-padding
+    is exact in float, but the psum reduction order makes this ≈ (not
+    bit-identical to) the unsharded float dot, as usual for float."""
+    return _sharded_dot(jnp.matmul, a, b, part, k_pad_unit=0)
+
+
 class _SubstrateBase:
-    """Shared float-dot (quantization boundary) + batched-conv plumbing."""
+    """Shared ``dot_general`` plumbing + deprecated wrappers."""
 
     meta: SubstrateMeta
+    #: the scalar-product model's f(0,0) — the k-padding correction unit.
+    #: 0 for exact backends, the wiring's compensation value for approx
+    #: ones, None where no per-product value exists (approx_stat).
+    _f00: Optional[int] = 0
 
-    # -- integer domain ------------------------------------------------------
+    # -- raw product model ---------------------------------------------------
 
     def scalar(self, a: Array, b: Array) -> Array:
         raise NotImplementedError
 
-    def dot_int8(self, a8: Array, b8: Array) -> Array:
+    def dot_int(self, a: Array, b: Array) -> Array:
+        """2-D (M,K)@(K,N) integer contraction (exact int32 adder)."""
         raise NotImplementedError
 
     def _stor(self, x: Array) -> Array:
         """Cast integer operands to the width's storage dtype (int8/int16)."""
         return jnp.asarray(x, quant.storage_dtype(self.meta.width))
 
-    # -- float domain (int-N quantization boundary) ---------------------------
+    # -- the contraction surface ---------------------------------------------
+
+    def dot_general(self, x: Array, w: Array,
+                    spec: Optional[ContractionSpec] = None) -> Array:
+        """General contraction of ``x`` and ``w`` under this substrate.
+
+        ``spec`` (default :class:`ContractionSpec`, i.e. plain matmul dims,
+        integer domain, unpartitioned) carries dimension numbers, the
+        quantization policy, and the mesh partitioning — see the class
+        docstrings. Output layout matches ``jax.lax.dot_general``:
+        ``(batch..., lhs_free..., rhs_free...)``.
+        """
+        spec = spec if spec is not None else ContractionSpec()
+        x = jnp.asarray(x)
+        w = jnp.asarray(w)
+        plan = _plan_contraction(x.shape, w.shape, spec.dimension_numbers)
+        if spec.quant is None:
+            if not (jnp.issubdtype(x.dtype, jnp.integer)
+                    and jnp.issubdtype(w.dtype, jnp.integer)):
+                raise TypeError(
+                    "integer-domain dot_general (spec.quant=None) needs "
+                    f"integer operands, got {x.dtype}/{w.dtype}; pass a "
+                    "QuantPolicy to contract float tensors")
+            out3 = self._contract3(plan.lhs3(x), plan.rhs3(w),
+                                   spec.partitioning)
+            return plan.unflatten(out3)
+        q = spec.quant
+        bits = q.bits if q.bits is not None else self.meta.width
+        if bits > self.meta.width:
+            raise ValueError(
+                f"QuantPolicy.bits={bits} exceeds the substrate operand "
+                f"width {self.meta.width} ({self.meta.spec}) — wider codes "
+                "would wrap in the narrower multiplier")
+        qa, sa = _quantize_operand(plan.lhs3(x), q.x_mode, q.x_scale,
+                                   contract_axis=2, bits=bits, eps=q.eps)
+        qb, sb = _quantize_operand(plan.rhs3(w), q.w_mode, q.w_scale,
+                                   contract_axis=1, bits=bits, eps=q.eps)
+        out3 = self._contract3(qa, qb, spec.partitioning)
+        out3 = out3.astype(jnp.float32) * (sa * sb)
+        return plan.unflatten(out3).astype(x.dtype)
+
+    def _contract3(self, a3: Array, b3: Array,
+                   partitioning: Optional[Partitioning]) -> Array:
+        """(B,M,K)@(B,K,N) via the backend 2-D kernel (vmap over batch)."""
+        if a3.shape[0] == 1:
+            return self._contract2(a3[0], b3[0], partitioning)[None]
+        if partitioning is not None:
+            raise NotImplementedError(
+                "partitioned dot_general with batch dimensions is not "
+                "supported yet — shard the batch outside, or drop "
+                "spec.partitioning")
+        return jax.vmap(self.dot_int)(a3, b3)
+
+    def _contract2(self, a: Array, b: Array,
+                   partitioning: Optional[Partitioning]) -> Array:
+        if partitioning is None:
+            return self.dot_int(a, b)
+        return _sharded_dot_int(self, a, b, partitioning)
+
+    # -- deprecated wrappers (kept signatures; all route via dot_general) ----
+
+    def dot_int8(self, a8: Array, b8: Array) -> Array:
+        """Deprecated alias of :meth:`dot_int` — the name was a lie at
+        N=16, where operands are int16."""
+        return self.dot_int(a8, b8)
 
     def dot(self, x: Array, w: Array) -> Array:
         """``x @ w`` with this substrate as the scalar-product unit.
 
+        Deprecated wrapper: ``dot_general`` with the plain matmul dims and
+        the default :class:`QuantPolicy` (per-tensor dynamic activation
+        scale, per-output-channel weight scales, substrate width).
         x: (..., K) activations (any float dtype); w: (K, N) weights.
-        Activations use a per-tensor dynamic scale; weights per-output-channel.
-        Quantization width follows ``meta.width``. Returns x's dtype.
+        Returns x's dtype.
         """
-        bits = self.meta.width
-        batch_shape = x.shape[:-1]
-        k = x.shape[-1]
-        x2 = x.reshape(-1, k)
-        qx = quant.quantize(x2, axes=None, bits=bits)   # per-tensor scalar scale
-        qw = quant.quantize(w, axes=(0,), bits=bits)    # per-output-channel (1, N)
-        acc = self.dot_int8(qx.values, qw.values)
-        out = acc.astype(jnp.float32) * (qx.scale * qw.scale)
-        return out.reshape(*batch_shape, w.shape[-1]).astype(x.dtype)
+        return self.dot_general(x, w, _DEFAULT_FLOAT_SPEC)
 
     # -- convolution ---------------------------------------------------------
 
     def conv2d(self, imgs: Array, kernel: Array) -> Array:
-        """Batched 'same' integer conv (im2col + ``dot_int8``); see nn.conv."""
+        """Batched 'same' integer conv (im2col + ``dot_general``); see
+        nn.conv. Deprecated-stable wrapper around ``conv.conv2d_batched``."""
         from repro.nn import conv  # late import: conv consumes substrates
 
         return conv.conv2d_batched(imgs, kernel, self)
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         return f"<{type(self).__name__} {self.meta.spec}>"
+
+
+#: the historical ``dot`` behavior as a spec: plain matmul, default policy.
+_DEFAULT_FLOAT_SPEC = ContractionSpec(quant=QuantPolicy())
 
 
 # ---------------------------------------------------------------------------
@@ -287,10 +735,15 @@ def _split_suffix(mult_name: str | None) -> tuple[str, int]:
 
 
 class ExactSubstrate(_SubstrateBase):
-    """Float reference: plain dot in the compute dtype, exact int contraction."""
+    """Float reference: plain dot in the compute dtype, exact int contraction.
+
+    The float path ignores the :class:`QuantPolicy` — this backend *is* the
+    unquantized reference the quantized substrates are compared against.
+    """
 
     def __init__(self, mult_name: str | None = None):
         _reject_wiring("exact", mult_name)
+        self._f00 = 0
         self.meta = SubstrateMeta("exact", "exact", bit_exact=True,
                                   scalar_faithful=True, preferred_backend="any",
                                   cost_hint="mxu")
@@ -298,11 +751,27 @@ class ExactSubstrate(_SubstrateBase):
     def scalar(self, a, b):
         return mult.exact_multiply(a, b)
 
-    def dot_int8(self, a8, b8):
-        return _exact_int_matmul(self._stor(a8), self._stor(b8))
+    def dot_int(self, a, b):
+        return _exact_int_matmul(self._stor(a), self._stor(b))
 
-    def dot(self, x, w):
-        return jnp.dot(x, w.astype(x.dtype))
+    def dot_general(self, x, w, spec: Optional[ContractionSpec] = None):
+        spec = spec if spec is not None else ContractionSpec()
+        x = jnp.asarray(x)
+        if spec.quant is not None:
+            # the quantization boundary is a no-op here by definition:
+            # contract in the compute dtype (the historical `dot`)
+            w = jnp.asarray(w, x.dtype)
+            plan = _plan_contraction(x.shape, w.shape, spec.dimension_numbers)
+            if spec.partitioning is None:
+                return jax.lax.dot_general(x, w, plan.dims)
+            if plan.b != 1:
+                raise NotImplementedError(
+                    "partitioned dot_general with batch dimensions is not "
+                    "supported yet")
+            out3 = _sharded_dot_float(plan.lhs3(x)[0], plan.rhs3(w)[0],
+                                      spec.partitioning)[None]
+            return plan.unflatten(out3)
+        return super().dot_general(x, w, spec)
 
 
 class Int8Substrate(_SubstrateBase):
@@ -310,6 +779,7 @@ class Int8Substrate(_SubstrateBase):
 
     def __init__(self, mult_name: str | None = None):
         _reject_wiring("int8", mult_name)
+        self._f00 = 0
         self.meta = SubstrateMeta("int8", "exact", bit_exact=True,
                                   scalar_faithful=True, preferred_backend="any",
                                   cost_hint="mxu")
@@ -317,8 +787,8 @@ class Int8Substrate(_SubstrateBase):
     def scalar(self, a, b):
         return mult.exact_multiply(a, b)
 
-    def dot_int8(self, a8, b8):
-        return _exact_int_matmul(self._stor(a8), self._stor(b8))
+    def dot_int(self, a, b):
+        return _exact_int_matmul(self._stor(a), self._stor(b))
 
 
 class BitexactSubstrate(_SubstrateBase):
@@ -339,8 +809,8 @@ class BitexactSubstrate(_SubstrateBase):
     def scalar(self, a, b):
         return self._fn(a, b)
 
-    def dot_int8(self, a8, b8):
-        return _bitexact_contract(self._stor(a8), self._stor(b8), self._fn,
+    def dot_int(self, a, b):
+        return _bitexact_contract(self._stor(a), self._stor(b), self._fn,
                                   f00=self._f00)
 
 
@@ -356,6 +826,7 @@ class LutSubstrate(_SubstrateBase):
                 f"{lut_lib.MAX_LUT_BITS}, got {n}); use approx_bitexact for "
                 "wider operands")
         self._key = key
+        self._f00 = int(lut_lib.f00(key))
         self.meta = SubstrateMeta("approx_lut", base, bit_exact=True,
                                   scalar_faithful=True, preferred_backend="any",
                                   cost_hint="gather", width=n)
@@ -366,14 +837,14 @@ class LutSubstrate(_SubstrateBase):
     def scalar(self, a, b):
         return lut_lib.lut_multiply(a, b, self._table())
 
-    def dot_int8(self, a8, b8):
+    def dot_int(self, a, b):
         table = self._table()
         n = self.meta.width
         size, off = 1 << n, 1 << (n - 1)
         return _bitexact_contract(
-            self._stor(a8), self._stor(b8),
+            self._stor(a), self._stor(b),
             lambda x, y: table[(x + off) & (size - 1), (y + off) & (size - 1)],
-            f00=lut_lib.f00(self._key))
+            f00=self._f00)
 
 
 class StatSubstrate(_SubstrateBase):
@@ -384,7 +855,7 @@ class StatSubstrate(_SubstrateBase):
     MXU-friendly HLO, and is the deployment-scale stand-in used by the
     multi-pod dry-runs (the Pallas kernel replaces it on real hardware).
     Beyond-paper contribution. The correction is defined at contraction level
-    (``scalar_faithful=False``): ``dot_int8`` rounds the summed correction
+    (``scalar_faithful=False``): ``dot_int`` rounds the summed correction
     once per output element, while ``scalar`` rounds per product. Widths ≤ 8
     (the separable model is fit on the exhaustive error LUT).
     """
@@ -398,6 +869,7 @@ class StatSubstrate(_SubstrateBase):
                 f"exhaustive error LUT (width <= {lut_lib.MAX_LUT_BITS}, "
                 f"got {n}); use approx_bitexact for wider operands")
         self._key = key
+        self._f00 = None  # the correction is not separable per product
         self.meta = SubstrateMeta("approx_stat", base, bit_exact=False,
                                   scalar_faithful=False, preferred_backend="any",
                                   cost_hint="mxu", width=n)
@@ -411,14 +883,14 @@ class StatSubstrate(_SubstrateBase):
         corr = jnp.asarray(r)[a + off] + jnp.asarray(c)[b + off]
         return a * b + corr.astype(jnp.int32)
 
-    def dot_int8(self, a8, b8):
+    def dot_int(self, a, b):
         n = self.meta.width
         off = 1 << (n - 1)
         # wrap into the width's operand domain first (module contract) so
         # both the exact matmul and the correction gathers see the same
         # operands the scalar model does
-        aw = mult.wrap_operand(jnp.asarray(a8, jnp.int32), n)
-        bw = mult.wrap_operand(jnp.asarray(b8, jnp.int32), n)
+        aw = mult.wrap_operand(jnp.asarray(a, jnp.int32), n)
+        bw = mult.wrap_operand(jnp.asarray(b, jnp.int32), n)
         # wrapped values fit the storage dtype (width ≤ 8 here), so the
         # contraction keeps the int8 MXU path
         exact = _exact_int_matmul(self._stor(aw), self._stor(bw))
@@ -455,6 +927,7 @@ class PallasSubstrate(_SubstrateBase):
                 f"LUT kernel (width <= {lut_lib.MAX_LUT_BITS}, got {n}); "
                 "use approx_bitexact for wider operands")
         self._key = key
+        self._f00 = int(lut_lib.f00(key))
         self._closed_form = base == "proposed" and n == mult.N_BITS
         self.meta = SubstrateMeta(
             "approx_pallas", base, bit_exact=True, scalar_faithful=True,
@@ -472,16 +945,16 @@ class PallasSubstrate(_SubstrateBase):
         return lut_lib.lut_multiply(
             a, b, jnp.asarray(lut_lib.build_lut(self._key)))
 
-    def dot_int8(self, a8, b8):
-        a8 = jnp.asarray(a8, jnp.int32)
-        b8 = jnp.asarray(b8, jnp.int32)
+    def dot_int(self, a, b):
+        a = jnp.asarray(a, jnp.int32)
+        b = jnp.asarray(b, jnp.int32)
         if self._closed_form:
             from repro.kernels.approx_matmul.ops import approx_matmul
 
-            return approx_matmul(a8, b8)
+            return approx_matmul(a, b)
         from repro.kernels.lut_matmul.ops import lut_matmul
 
-        return lut_matmul(a8, b8, self._table())
+        return lut_matmul(a, b, self._table())
 
 
 # ---------------------------------------------------------------------------

@@ -54,11 +54,17 @@ class EdgeDetectService:
                         bucket key (1 = exact-shape buckets, no padding).
     pad_batches:        pad the batch dim to max_batch_size before the
                         compiled call, so occupancy changes don't retrace.
+    partitioning:       optional :class:`repro.nn.substrate.Partitioning` —
+                        the served contraction lowers through shard_map
+                        (data-parallel M / reduce-scattered K). Bit-identity
+                        to the unsharded path holds for every bit-exact
+                        substrate, so served maps are unchanged.
     """
 
     def __init__(self, substrate: "str | sub.ProductSubstrate" = "approx_bitexact",
                  *, max_batch_size: int = 8, max_wait_s: float = 2e-3,
                  bucket_granularity: int = 16, pad_batches: bool = True,
+                 partitioning: Optional[sub.Partitioning] = None,
                  metrics: Optional[ServingMetrics] = None, start: bool = True):
         if bucket_granularity < 1:
             raise ValueError(
@@ -67,10 +73,12 @@ class EdgeDetectService:
         self.spec = self.substrate.meta.spec
         self.bucket_granularity = bucket_granularity
         self.pad_batches = pad_batches
+        self.partitioning = partitioning
         self.metrics = metrics or ServingMetrics()
         self._compiled_keys = set()  # (batch, H, W) shapes traced so far
         self._jit_fn = jax.jit(
-            lambda imgs: conv.edge_detect_batched(imgs, self.substrate))
+            lambda imgs: conv.edge_detect_batched(
+                imgs, self.substrate, partitioning=self.partitioning))
         self.batcher = MicroBatcher(
             self._process, max_batch_size=max_batch_size,
             max_wait_s=max_wait_s, bucket_fn=self._bucket,

@@ -12,11 +12,19 @@ import pytest
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
-def run_py(code: str, n_devices: int = 8) -> str:
+def run_py(code: str, n_devices: int = 8, extra_env: dict | None = None) -> str:
+    """Run a code snippet in a subprocess with N forced host devices.
+
+    Shared harness — ``tests/test_dot_general.py`` reuses it for the
+    sharded-contraction parity suite. ``extra_env`` overlays the
+    environment (e.g. interpret-mode toggles).
+    """
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
     env["PYTHONPATH"] = os.path.join(REPO, "src")
     env["JAX_PLATFORMS"] = "cpu"
+    if extra_env:
+        env.update(extra_env)
     out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
                          capture_output=True, text=True, env=env, timeout=500)
     assert out.returncode == 0, out.stderr[-3000:]
@@ -160,3 +168,58 @@ def test_sharding_rules_shard_big_leaves():
         assert worst < 8 * 2**30, worst  # largest leaf < 8 GiB/device
     """, n_devices=512)
     assert "worst" in out
+
+
+def test_sharded_edge_detect_matches_unsharded():
+    """edge_detect_batched under a Partitioning (serving mesh path) is
+    bit-identical to the unsharded path on 8 devices."""
+    out = run_py("""
+        import jax, numpy as np
+        from repro.data import image_batch
+        from repro.launch import mesh as mesh_lib
+        from repro.nn import conv
+
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        part = mesh_lib.contraction_partitioning(mesh)
+        imgs = image_batch(4, 24, 24)
+        for spec in ("approx_bitexact", "approx_lut:design_strollo2020"):
+            ref = np.asarray(conv.edge_detect_batched(imgs, spec))
+            got = np.asarray(
+                conv.edge_detect_batched(imgs, spec, partitioning=part))
+            np.testing.assert_array_equal(got, ref, err_msg=spec)
+        print("sharded edge ok", part.m_shards, part.k_shards)
+    """)
+    assert "sharded edge ok 4 2" in out
+
+
+def test_dryrun_partitioned_approx_substrate_lowers():
+    """--dot-partition mesh path: an approx substrate (approx_stat) lowers
+    and compiles on a debug mesh with every dense() through shard_map."""
+    out = run_py("""
+        import jax, jax.numpy as jnp
+        from repro.launch import mesh as mesh_lib
+        from repro.models import registry as reg
+        from repro.nn import substrate as psub
+
+        cfg = reg.get_config("minitron-8b", n_layers=2, d_model=128, d_ff=256,
+                             vocab=512, n_heads=4, n_kv_heads=2,
+                             attn_chunk=64, loss_chunk=64, remat=False,
+                             dot_mode="approx_stat")
+        bundle = reg._BUILDERS[cfg.family](cfg)
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        part = mesh_lib.contraction_partitioning(mesh)
+        assert (part.m_axis, part.k_axis) == ("data", "model")
+        with mesh, psub.partitioning_scope(part):
+            params_sds = reg.param_specs(bundle)
+            p_sh = mesh_lib.param_shardings(params_sds, mesh)
+            batch = {"tokens": jax.ShapeDtypeStruct((8, 64), jnp.int32),
+                     "labels": jax.ShapeDtypeStruct((8, 64), jnp.int32)}
+            b_sh = mesh_lib.batch_shardings(batch, mesh)
+            compiled = jax.jit(bundle.loss_fn,
+                               in_shardings=(p_sh, b_sh)).lower(
+                params_sds, batch).compile()
+        assert "psum" in compiled.as_text() or \
+            "all-reduce" in compiled.as_text()
+        print("partitioned lowering ok")
+    """)
+    assert "partitioned lowering ok" in out
