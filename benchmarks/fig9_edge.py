@@ -70,13 +70,13 @@ def run(substrates=None) -> list:
         print(f"{spec:>28s} PSNR={p:6.2f} dB")
         rows.append((f"fig9/width/{spec}", us, f"psnr={p:.2f}dB"))
 
-    # Pallas laplacian_conv kernel path (interpret mode on CPU)
-    from repro.kernels.laplacian_conv.ops import laplacian_conv
+    # fused conv kernel path (im2col inside the kernel; interpret on CPU)
+    from repro.kernels.fused_conv.ops import fused_conv2d
     img = test_image(96, 96)
-    px = (np.asarray(img, np.int32) >> 1)
+    px = (np.asarray(img, np.int32) >> 1)[None]
     t0 = time.perf_counter()
-    _ = np.asarray(laplacian_conv(px))
+    _ = np.asarray(fused_conv2d(px, conv.LAPLACIAN, "proposed"))
     us = (time.perf_counter() - t0) * 1e6
-    rows.append(("fig9/pallas_kernel", us, "interpret=True"))
-    print(f"pallas laplacian_conv (interpret): {us:.0f} us")
+    rows.append(("fig9/pallas_fused_conv", us, "interpret=True"))
+    print(f"pallas fused_conv (interpret): {us:.0f} us")
     return rows

@@ -7,7 +7,7 @@ Run: PYTHONPATH=src python examples/edge_detection.py
 import numpy as np
 
 from repro.data import image_batch, photo_like, test_image
-from repro.kernels.laplacian_conv.ops import laplacian_conv
+from repro.kernels.fused_conv.ops import fused_conv2d
 from repro.nn import conv
 from repro.nn import substrate as sub
 
@@ -50,13 +50,13 @@ def main():
     assert np.array_equal(pallas, singles[:2]), "Pallas substrate must match"
     print("approx_pallas substrate output == core model: OK")
 
-    # dedicated Laplacian Pallas kernel agrees with the core model too
+    # fused conv kernel (im2col inside the kernel) agrees with the core model
     px = np.asarray(img, np.int32) >> 1
-    kern = np.asarray(laplacian_conv(px))
+    kern = np.asarray(fused_conv2d(px[None], conv.LAPLACIAN, "proposed"))[0]
     ref = np.asarray(conv.conv2d_int(px, conv.LAPLACIAN,
                                      sub.get_substrate("approx_bitexact").scalar))
-    assert np.array_equal(kern, ref), "Pallas kernel must match the core model"
-    print("Pallas laplacian_conv kernel output == core model: OK")
+    assert np.array_equal(kern, ref), "fused kernel must match the core model"
+    print("Pallas fused_conv kernel output == core model: OK")
 
     print("\nPSNR across designs (photo-statistics image, LUT substrate):")
     photo = photo_like(128, 128)

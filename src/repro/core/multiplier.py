@@ -234,18 +234,24 @@ class CSPWiring:
     c3: comp.Compressor
 
 
-def _csp_slot_taps(n: int) -> tuple[list, list, list]:
+def csp_slot_taps(n: int) -> tuple[list, list, list]:
     """Positive-pp (i, j) taps feeding each CSP slot at width n.
 
     Column n-1 holds p(i, n-1-i) for i in 1..n-2: C1a takes i ∈ {1,2,3},
     C1b takes i ∈ {4,5,6}. Column n holds p(i, n-i) for i in 2..n-2: C3
     takes i ∈ {2,3,4}. Taps beyond the column population (narrow n) simply
     don't exist; taps beyond these windows (wide n) are reduced exactly.
+
+    Public: ``kernels.closed_form.make_closed_form`` generates its
+    vectorized per-wiring kernels from these taps.
     """
     c1a = [(i, n - 1 - i) for i in range(1, min(4, n - 1))]
     c1b = [(i, n - 1 - i) for i in range(4, min(7, n - 1))]
     c3 = [(i, n - i) for i in range(2, min(5, n - 1))]
     return c1a, c1b, c3
+
+
+_csp_slot_taps = csp_slot_taps  # historical (pre-public) name
 
 
 def _slot_index(c: comp.Compressor, neg, pps, zero: Array):

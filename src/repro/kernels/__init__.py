@@ -1,12 +1,23 @@
 """Pallas TPU kernels for the paper's compute hot spots.
 
 Each kernel ships as kernel.py (pl.pallas_call + BlockSpec tiling),
-ops.py (jit'd public wrapper, padding, interpret fallback off-TPU) and
-ref.py (pure-jnp oracle used by the allclose test sweeps).
+ops.py (jit'd public wrapper, padding, interpret-mode selection via
+``blocking.resolve_interpret``) and ref.py (pure-jnp oracle used by the
+bit-identity test sweeps).
 
-* ``approx_mul`` / ``approx_matmul`` / ``laplacian_conv`` — the proposed
-  8-bit multiplier's closed form (elementwise, matmul, 3×3 conv).
-* ``lut_matmul`` — wiring/width-generic matmul: the scalar product is a
-  gather into a flat (2^N · 2^N,) product table, so every wiring in
-  ``core.multiplier.ALL_MULTIPLIERS`` at widths 3..8 is TPU-runnable.
+* ``closed_form`` — the proposed design's hand-derived closed form plus
+  :func:`~repro.kernels.closed_form.make_closed_form`, which generates the
+  vectorized closed form for *every* CSP wiring × width 3..16 from
+  ``core.multiplier``'s slot taps.
+* ``approx_mul`` / ``approx_matmul`` — elementwise and tiled-matmul
+  kernels over a pluggable closed-form product model (vectorized
+  ``k_chunk`` k-slab walk).
+* ``lut_matmul`` — matmul fallback for product models with no CSP
+  structure: the scalar product is a gather into a flat (2^N · 2^N,)
+  product table, enumerable at widths 3..8.
+* ``fused_conv`` — batched 'same' conv with im2col *inside* the kernel
+  (row-shifted padded views, per-distinct-coefficient product maps); the
+  fast path behind ``nn.conv.conv2d_batched`` for Pallas substrates.
+  Absorbs the retired single-image ``laplacian_conv`` (its oracle lives on
+  as ``fused_conv.ref.laplacian_conv_ref``).
 """

@@ -1,4 +1,12 @@
-"""Jit'd public wrapper for the approximate matmul kernel."""
+"""Jit'd public wrappers for the approximate matmul kernel.
+
+* :func:`approx_matmul` — the historical entry point: proposed@8 via the
+  hand-derived closed form.
+* :func:`closed_form_matmul` — any CSP wiring/width 3..8 via the generated
+  closed form (``kernels.closed_form.make_closed_form``); this is what
+  ``nn.substrate.PallasSubstrate`` dispatches to, so non-proposed wirings
+  run pure VPU algebra instead of the LUT-gather kernel.
+"""
 from __future__ import annotations
 
 import functools
@@ -7,10 +15,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import lut as lut_lib
+from repro.core import multiplier as mult
 from repro.kernels import blocking
 from repro.kernels.approx_matmul.kernel import approx_matmul_pallas
-
-_INTERPRET = jax.default_backend() != "tpu"
+from repro.kernels.closed_form import closed_form_f00, make_closed_form
 
 
 @functools.lru_cache(maxsize=None)
@@ -25,18 +33,58 @@ def _f00() -> int:
     return lut_lib.f00("proposed")
 
 
-@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k"))
-def approx_matmul(a, b, block_m: int = 128, block_n: int = 128, block_k: int = 128):
+@functools.partial(jax.jit,
+                   static_argnames=("block_m", "block_n", "block_k", "k_chunk"))
+def approx_matmul(a, b, block_m: int = 128, block_n: int = 128,
+                  block_k: int = 128, k_chunk: int = 8):
     """(M,K) @ (K,N) under the proposed approximate multiplier.
 
     Pads every dim to its block multiple. Zero-padding the contraction dim
     injects f(0,0)=192 per padded k element (the compensation constant fires
     on zero operands — faithful to the netlist), which is subtracted back.
+    ``k_chunk=1`` recovers the pre-vectorization scalar k-walk (kept as the
+    benchmark baseline).
     """
     a = jnp.asarray(a, jnp.int32)
     b = jnp.asarray(b, jnp.int32)
     return blocking.pad_crop_correct(
         a, b, _f00(),
         lambda ap, bp, bm, bn, bk: approx_matmul_pallas(
-            ap, bp, block_m=bm, block_n=bn, block_k=bk, interpret=_INTERPRET),
+            ap, bp, block_m=bm, block_n=bn, block_k=bk, k_chunk=k_chunk,
+            interpret=blocking.resolve_interpret()),
         block_m=block_m, block_n=block_n, block_k=block_k)
+
+
+@functools.lru_cache(maxsize=None)
+def _closed_form_runner(key: str, block_m: int, block_n: int, block_k: int,
+                        k_chunk: int):
+    product_fn = make_closed_form(key)
+    f00 = closed_form_f00(key)
+
+    @jax.jit
+    def run(a, b):
+        a = jnp.asarray(a, jnp.int32)
+        b = jnp.asarray(b, jnp.int32)
+        return blocking.pad_crop_correct(
+            a, b, f00,
+            lambda ap, bp, bm, bn, bk: approx_matmul_pallas(
+                ap, bp, product_fn=product_fn, block_m=bm, block_n=bn,
+                block_k=bk, k_chunk=k_chunk,
+                interpret=blocking.resolve_interpret()),
+            block_m=block_m, block_n=block_n, block_k=block_k)
+
+    return run
+
+
+def closed_form_matmul(a, b, mult_key: str = "proposed", *,
+                       block_m: int = 128, block_n: int = 128,
+                       block_k: int = 128, k_chunk: int = 8):
+    """(M,K) @ (K,N) under any CSP wiring's *generated* closed form.
+
+    ``mult_key``: ``"name[@N]"`` (aliases resolve). Same pad/crop/f(0,0)
+    contract as :func:`approx_matmul`; the jitted runner is cached per
+    (wiring, block sizes, k_chunk).
+    """
+    run = _closed_form_runner(mult.canonical_key(mult_key),
+                              block_m, block_n, block_k, k_chunk)
+    return run(a, b)

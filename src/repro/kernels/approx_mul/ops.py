@@ -6,9 +6,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import blocking
 from repro.kernels.approx_mul.kernel import approx_mul_pallas
-
-_INTERPRET = jax.default_backend() != "tpu"
 
 
 @functools.partial(jax.jit, static_argnames=("block_m", "block_n"))
@@ -30,5 +29,6 @@ def approx_mul(a, b, block_m: int = 256, block_n: int = 128):
     total = (rows + pad_rows) * bn
     a2 = jnp.pad(flat, (0, total - n_el)).reshape(rows + pad_rows, bn)
     b2 = jnp.pad(b.reshape(-1), (0, total - n_el)).reshape(rows + pad_rows, bn)
-    out = approx_mul_pallas(a2, b2, block_m=bm, block_n=bn, interpret=_INTERPRET)
+    out = approx_mul_pallas(a2, b2, block_m=bm, block_n=bn,
+                            interpret=blocking.resolve_interpret())
     return out.reshape(-1)[:n_el].reshape(shape)

@@ -1,22 +1,61 @@
-"""Shared pad-to-block / crop / f(0,0)-correct plumbing for matmul kernels.
+"""Shared plumbing for the Pallas kernel wrappers.
 
-Both Pallas matmul wrappers (``approx_matmul/ops.py``, ``lut_matmul/ops.py``)
-accept arbitrary (M, K, N) and present block-multiple shapes to their
-kernel: clamp the requested block sizes to TPU-tileable minima, zero-pad
-every dim up, crop the result, and subtract the multiplier's f(0,0) per
-padded k element (approximate wirings map (0,0) to a nonzero compensation
-value, so k-padding injects spurious contributions). One implementation
-here so the two kernel paths cannot silently diverge.
+Two concerns, one home, so the kernel paths cannot silently diverge:
+
+* pad-to-block / crop / f(0,0)-correct for the matmul kernels
+  (``approx_matmul/ops.py``, ``lut_matmul/ops.py``): clamp the requested
+  block sizes to TPU-tileable minima, zero-pad every dim up, crop the
+  result, and subtract the multiplier's f(0,0) per padded k element
+  (approximate wirings map (0,0) to a nonzero compensation value, so
+  k-padding injects spurious contributions);
+* interpret-mode selection (:func:`resolve_interpret`): one policy —
+  explicit param beats the ``REPRO_PALLAS_INTERPRET`` env override beats
+  the backend default — consumed by every ops wrapper instead of
+  per-module ``_INTERPRET`` flags.
 """
 from __future__ import annotations
 
-from typing import Callable
+import os
+from typing import Callable, Optional
 
+import jax
 import jax.numpy as jnp
 
 # TPU int32 tile: the second-to-last dim aligns to 8 sublanes, the last to
 # 128 lanes — block clamps for small shapes round up to these.
-_SUBLANE, _LANE = 8, 128
+SUBLANE, LANE = 8, 128
+_SUBLANE, _LANE = SUBLANE, LANE  # historical (pre-public) names
+
+#: env var forcing Pallas interpret mode on ("1"/"true"/...) or off.
+INTERPRET_ENV = "REPRO_PALLAS_INTERPRET"
+
+_TRUTHY = ("1", "true", "yes", "on")
+_FALSY = ("0", "false", "no", "off")
+
+
+def resolve_interpret(interpret: Optional[bool] = None) -> bool:
+    """Should a Pallas kernel run in interpret mode?
+
+    Precedence: an explicit ``interpret`` argument wins; otherwise the
+    ``REPRO_PALLAS_INTERPRET`` env var (``1/true/yes/on`` vs
+    ``0/false/no/off``); otherwise interpret everywhere except on real TPU.
+    The ops wrappers call this at trace time, so inside a jitted wrapper
+    the decision is baked into the first trace for a given shape —
+    set the env var before the first kernel call, not between calls.
+    """
+    if interpret is not None:
+        return bool(interpret)
+    env = os.environ.get(INTERPRET_ENV)
+    if env is not None:
+        v = env.strip().lower()
+        if v in _TRUTHY:
+            return True
+        if v in _FALSY:
+            return False
+        raise ValueError(
+            f"{INTERPRET_ENV}={env!r} is neither truthy {_TRUTHY} nor "
+            f"falsy {_FALSY}")
+    return jax.default_backend() != "tpu"
 
 
 def ceil_to(x: int, mult: int) -> int:

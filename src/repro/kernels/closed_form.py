@@ -1,21 +1,39 @@
-"""Kernel-friendly closed form of the proposed approximate multiplier.
+"""Kernel-friendly closed forms of the CSP approximate multipliers.
 
-The core-library model (`repro.core.multiplier`) expands all 28 truncated
-partial products. For the Pallas kernels we use an algebraically identical
-but much cheaper form (≈25 VPU integer ops per element):
+Two layers:
 
-* truncation via the 7-term identity
-    trunc(a,b) = Σ_{i=0}^{6} a_i · 2^i · (b & (2^{7-i} − 1))
-  (each column sum collapses into a masked value of b);
-* the single approximate compressor's error (e_C1a) as arithmetic on four
-  partial-product bits (the exact compressors contribute no error).
+* :func:`approx_product_i32` — the hand-derived closed form of the paper's
+  proposed 8-bit design (≈25 VPU integer ops per element), kept verbatim as
+  the reference the generator is checked against.
+* :func:`make_closed_form` — the same algebra generated for *any* CSP
+  wiring in ``core.multiplier.WIRINGS`` at any width 3..16, from the slot
+  taps and the compressor truth tables:
 
-`tests/test_kernels_closed_form.py` asserts bit-equality with the core model
-on all 65 536 operand pairs.
+      approx(a,b) = a·b − trunc + comp_n + 2^{n-1}·(a_{n-1}·b_0)
+                    + 2^{n-1}·(e_C1a + e_C1b) + 2^n·e_C3     (mod 2^{2n})
+
+  with the truncation collapsed into the (n−1)-term masked-operand identity
+      trunc(a,b) = Σ_{i=0}^{n-2} a_i · 2^i · (b & (2^{n-1-i} − 1))
+  and each slot error evaluated as a compare-select sum over the *nonzero*
+  truth-table entries (exact compressors vanish entirely) — pure VPU
+  integer ops, no gathers, so every wiring runs on the vectorized Pallas
+  kernels instead of paying the LUT-gather cost.
+
+``tests/test_kernels_closed_form.py`` asserts bit-equality of
+:func:`approx_product_i32` with the core model on all 65 536 operand pairs;
+``tests/test_fused_conv.py`` extends the contract to the generated forms
+(exhaustive at N=4, sampled at the other widths).
 """
 from __future__ import annotations
 
+import functools
+
+import jax
 import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compressors as comp
+from repro.core import multiplier as mult
 
 Array = jnp.ndarray
 
@@ -48,3 +66,90 @@ def approx_product_i32(a: Array, b: Array) -> Array:
     # wrap to 16-bit two's complement
     u = raw & 0xFFFF
     return jnp.where(u >= 0x8000, u - 0x10000, u)
+
+
+# ---------------------------------------------------------------------------
+# Generated closed forms (any wiring × width)
+# ---------------------------------------------------------------------------
+
+
+def _slot_error_terms(c: comp.Compressor) -> list[tuple[int, int]]:
+    """(packed_index, error) pairs where the truth table deviates from exact."""
+    return [(v, int(e)) for v, e in enumerate(np.asarray(c.errors)) if e]
+
+
+def make_closed_form(key: str, n: int | None = None):
+    """Vectorized closed-form product fn for a CSP wiring (``"name[@N]"``).
+
+    Returns ``fn(a, b) -> int32`` bit-identical to
+    ``core.multiplier.make_multiplier`` at the same wiring/width — operands
+    wrap into the signed n-bit domain, output wraps to 2n-bit two's
+    complement. ``csp_*`` aliases resolve; ``"exact"`` is rejected (it has
+    no CSP structure — use ``mult.exact_multiply``).
+    """
+    base, kn = mult.split_width(key)
+    width = n if n is not None else kn
+    base = mult.WIRING_ALIASES.get(base, base)
+    return _build_closed_form(base, width)
+
+
+@functools.lru_cache(maxsize=None)
+def _build_closed_form(base: str, nb: int):
+    wiring = mult.get_wiring(base)  # rejects "exact" / unknown names
+    comp_const = mult.compensation_constant(nb)  # validates the width
+    t1a, t1b, t3 = mult.csp_slot_taps(nb)
+    # slot spec: (compressor, index of the negative-pp row or None, pos taps)
+    slot_specs = ((wiring.c1a, 0, t1a), (wiring.c1b, None, t1b),
+                  (wiring.c3, 1, t3))
+
+    def fn(a: Array, b: Array) -> Array:
+        a = mult.wrap_operand(jnp.asarray(a, jnp.int32), nb)
+        b = mult.wrap_operand(jnp.asarray(b, jnp.int32), nb)
+        ab = a * b
+
+        # truncation via the (n−1)-term masked-operand identity
+        t = jnp.zeros_like(ab)
+        for i in range(nb - 1):
+            t = t + (((a >> i) & 1) * ((b & ((1 << (nb - 1 - i)) - 1)) << i))
+
+        # NAND→1 conversion ¬(a_{n-1}·b_0) → constant
+        conv = ((a >> (nb - 1)) & 1) & (b & 1)
+
+        def slot_error(c, neg_row, taps):
+            terms = _slot_error_terms(c)
+            if not terms:  # exact compressor: no error, no index to pack
+                return None
+            bits = []
+            if neg_row is not None:
+                bits.append(1 - (((a >> neg_row) & 1) & ((b >> (nb - 1)) & 1)))
+            bits += [((a >> i) & 1) & ((b >> j) & 1) for i, j in taps]
+            bits = bits[: c.n_inputs]
+            while len(bits) < c.n_inputs:
+                bits.append(jnp.zeros_like(ab))
+            idx = comp.pack_bits(bits)
+            err = jnp.zeros_like(ab)
+            for v, e in terms:
+                err = err + e * (idx == v).astype(jnp.int32)
+            return err
+
+        raw = ab - t + comp_const + (conv << (nb - 1))
+        for (c, neg_row, taps), shift in zip(slot_specs, (nb - 1, nb - 1, nb)):
+            err = slot_error(c, neg_row, taps)
+            if err is not None:
+                raw = raw + (err << shift)
+        return mult.wrap_to_width(raw, 2 * nb)
+
+    fn.__name__ = f"closed_form_{base}@{nb}"
+    return fn
+
+
+@functools.lru_cache(maxsize=None)
+def closed_form_f00(key: str, n: int | None = None) -> int:
+    """The wiring's product at (0, 0) — the k-padding correction unit.
+
+    Computed from the generated closed form itself (works at any width,
+    unlike the enumerable-table ``core.lut.f00``).
+    """
+    fn = make_closed_form(key, n)
+    with jax.ensure_compile_time_eval():
+        return int(fn(jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32)))

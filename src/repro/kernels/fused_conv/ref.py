@@ -1,0 +1,28 @@
+"""Pure-jnp oracles for the fused conv kernel.
+
+``laplacian_conv_ref`` is the parity oracle absorbed from the retired
+single-image ``kernels/laplacian_conv`` package (kept verbatim: 'same'
+Laplacian conv of signed-domain pixels through the core scalar model).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import multiplier as mult
+from repro.nn import conv
+
+
+def fused_conv_ref(imgs, kernel, mult_key: str = "proposed"):
+    """Batched 'same' conv via the scalar tap loop (``conv.conv2d_int``)."""
+    _, fn, _ = mult.resolve_multiplier(mult_key)
+    kernel = jnp.asarray(kernel, jnp.int32)
+    imgs = jnp.asarray(imgs, jnp.int32)
+    return jax.vmap(lambda im: conv.conv2d_int(im, kernel, fn))(imgs)
+
+
+def laplacian_conv_ref(img_i32):
+    """'same' Laplacian conv of signed-domain pixels via the core model."""
+    return conv.conv2d_int(
+        jnp.asarray(img_i32, jnp.int32), jnp.asarray(conv.LAPLACIAN),
+        mult.approx_multiply)

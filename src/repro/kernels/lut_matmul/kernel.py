@@ -1,10 +1,13 @@
 """Tiled LUT-input approximate matmul Pallas kernel (any wiring, N ≤ 8).
 
 Width- and wiring-generic sibling of ``kernels/approx_matmul``: instead of
-hard-coding one closed form, the scalar product is a gather into a flat
-``(2^N · 2^N,)`` int32 product table (``core.lut.flat_lut``), so every
-wiring in ``core.multiplier.ALL_MULTIPLIERS`` — and every enumerable width
-3..8 — runs on the same kernel. The gather index for a product f(a, b) is
+a closed form, the scalar product is a gather into a flat ``(2^N · 2^N,)``
+int32 product table (``core.lut.flat_lut``), so every wiring in
+``core.multiplier.ALL_MULTIPLIERS`` — and every enumerable width 3..8 —
+runs on the same kernel. (Since the closed-form generator landed, the LUT
+kernel is the *fallback* path: ``PallasSubstrate`` prefers the generated
+VPU kernel and keeps this one for product models with no CSP structure.)
+The gather index for a product f(a, b) is
 
     idx = ((a + 2^(N-1)) & (2^N - 1)) << N  |  ((b + 2^(N-1)) & (2^N - 1))
 
@@ -14,10 +17,11 @@ semantics the closed form and the 2-D LUT gather implement.
 
 Tiling matches ``approx_matmul``: grid (M/bm, N/bn, K/bk); the (bm, bn)
 output block is revisited across the k dimension (TPU sequential grid) and
-accumulated in place; the inner k-slab walks a (bm, 1) column of A against
-a (1, bn) row of B. The table rides along as a VMEM-resident input (256 KiB
-at N=8, the worst case), so each product is a few VPU index ops plus one
-VMEM gather. Interpret mode runs the identical kernel body off-TPU.
+accumulated in place; the inner k-slab is walked in ``k_chunk``-wide slabs,
+each indexing a (bm, kc, bn) block and resolving it with one batched VMEM
+gather (``k_chunk=1`` recovers the historical per-k rank-1 walk). The
+table rides along as a VMEM-resident input (256 KiB at N=8, the worst
+case). Interpret mode runs the identical kernel body off-TPU.
 """
 from __future__ import annotations
 
@@ -28,6 +32,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels import blocking
+from repro.kernels.approx_matmul.kernel import resolve_k_chunk
 
 
 def table_width(size: int) -> int:
@@ -41,7 +46,7 @@ def table_width(size: int) -> int:
 
 
 def _lut_matmul_kernel(a_ref, b_ref, t_ref, o_ref, *, block_k: int,
-                       n_bits: int):
+                       k_chunk: int, n_bits: int):
     k_idx = pl.program_id(2)
 
     @pl.when(k_idx == 0)
@@ -54,27 +59,29 @@ def _lut_matmul_kernel(a_ref, b_ref, t_ref, o_ref, *, block_k: int,
     b = b_ref[...].astype(jnp.int32)  # (bk, bn)
     table = t_ref[...]                # (2^{2n},) flat product table
 
-    def body(kk, acc):
-        a_col = jax.lax.dynamic_slice_in_dim(a, kk, 1, axis=1)  # (bm, 1)
-        b_row = jax.lax.dynamic_slice_in_dim(b, kk, 1, axis=0)  # (1, bn)
-        ai = (a_col + off) & mask
-        bi = (b_row + off) & mask
-        idx = (ai << n_bits) | bi                               # (bm, bn)
-        return acc + jnp.take(table, idx, axis=0)
+    def body(j, acc):
+        a_s = jax.lax.dynamic_slice_in_dim(a, j * k_chunk, k_chunk, axis=1)
+        b_s = jax.lax.dynamic_slice_in_dim(b, j * k_chunk, k_chunk, axis=0)
+        ai = (a_s + off) & mask                      # (bm, kc)
+        bi = (b_s + off) & mask                      # (kc, bn)
+        idx = (ai[:, :, None] << n_bits) | bi[None, :, :]  # (bm, kc, bn)
+        return acc + jnp.take(table, idx, axis=0).sum(axis=1)
 
-    acc = jax.lax.fori_loop(0, block_k, body, jnp.zeros_like(o_ref))
+    acc = jax.lax.fori_loop(0, block_k // k_chunk, body, jnp.zeros_like(o_ref))
     o_ref[...] += acc
 
 
 def lut_matmul_pallas(a, b, table, *, block_m: int = 128, block_n: int = 128,
-                      block_k: int = 128, interpret: bool = False):
+                      block_k: int = 128, k_chunk: int = 8,
+                      interpret: bool = False):
     """(M,K) @ (K,N) contraction with the scalar product read from ``table``.
 
     a: (M, K) int32; b: (K, N) int32; table: flat (2^{2n},) int32 product
-    LUT (``core.lut.flat_lut``). Returns (M, N) int32. Every dim must be a
-    multiple of its block size — ``ops.lut_matmul`` pads arbitrary shapes
-    and corrects the f(0,0) padding artifact; direct callers get a loud
-    error instead of silent garbage.
+    LUT (``core.lut.flat_lut``). Returns (M, N) int32. ``k_chunk`` is
+    clamped to a divisor of the block. Every dim must be a multiple of its
+    block size — ``ops.lut_matmul`` pads arbitrary shapes and corrects the
+    f(0,0) padding artifact; direct callers get a loud error instead of
+    silent garbage.
     """
     m, k = a.shape
     _, n = b.shape
@@ -82,9 +89,11 @@ def lut_matmul_pallas(a, b, table, *, block_m: int = 128, block_n: int = 128,
         "lut_matmul_pallas", "kernels.lut_matmul.ops.lut_matmul",
         a.shape, b.shape, block_m, block_n, block_k)
     n_bits = table_width(table.shape[0])
+    k_chunk = resolve_k_chunk(k_chunk, block_k)
     grid = (m // block_m, n // block_n, k // block_k)
     return pl.pallas_call(
-        functools.partial(_lut_matmul_kernel, block_k=block_k, n_bits=n_bits),
+        functools.partial(_lut_matmul_kernel, block_k=block_k,
+                          k_chunk=k_chunk, n_bits=n_bits),
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),

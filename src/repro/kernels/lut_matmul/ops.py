@@ -9,12 +9,11 @@ import jax.numpy as jnp
 from repro.kernels import blocking
 from repro.kernels.lut_matmul.kernel import lut_matmul_pallas, table_width
 
-_INTERPRET = jax.default_backend() != "tpu"
 
-
-@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k"))
+@functools.partial(jax.jit,
+                   static_argnames=("block_m", "block_n", "block_k", "k_chunk"))
 def lut_matmul(a, b, table, block_m: int = 128, block_n: int = 128,
-               block_k: int = 128):
+               block_k: int = 128, k_chunk: int = 8):
     """(M,K) @ (K,N) under the approximate multiplier defined by ``table``.
 
     ``table`` is the flat (2^{2n},) product LUT of any wiring/width ≤ 8
@@ -22,7 +21,8 @@ def lut_matmul(a, b, table, block_m: int = 128, block_n: int = 128,
     padding of the contraction dim injects f(0,0) per padded k element (the
     compensation constant fires on zero operands — faithful to the netlist),
     which is looked up from the table — it differs per wiring and width —
-    and subtracted back.
+    and subtracted back. ``k_chunk=1`` recovers the pre-vectorization
+    per-k gather walk (kept as the benchmark baseline).
     """
     a = jnp.asarray(a, jnp.int32)
     b = jnp.asarray(b, jnp.int32)
@@ -34,5 +34,5 @@ def lut_matmul(a, b, table, block_m: int = 128, block_n: int = 128,
         a, b, f00,
         lambda ap, bp, bm, bn, bk: lut_matmul_pallas(
             ap, bp, table, block_m=bm, block_n=bn, block_k=bk,
-            interpret=_INTERPRET),
+            k_chunk=k_chunk, interpret=blocking.resolve_interpret()),
         block_m=block_m, block_n=block_n, block_k=block_k)

@@ -93,7 +93,7 @@ _CONV_DIMS = (((3,), (0,)), ((), ()))
 
 def conv2d_batched(imgs: Array, kernel: Array,
                    substrate: "str | object" = "approx_bitexact",
-                   partitioning=None) -> Array:
+                   partitioning=None, fused: "bool | None" = None) -> Array:
     """Batched 'same' integer convolution via im2col + substrate contraction.
 
     imgs: (B, H, W) or NHWC (B, H, W, C) int32 in [-128, 127] (channels are
@@ -106,6 +106,16 @@ def conv2d_batched(imgs: Array, kernel: Array,
     :class:`repro.nn.substrate.Partitioning` — shards the contraction
     through shard_map (bit-identical for bit-exact substrates). Returns
     int32 of imgs' shape.
+
+    ``fused`` selects the substrate's fused conv kernel (in-kernel im2col,
+    no host-side patch tensor — ``kernels/fused_conv``): ``None`` (default)
+    auto-picks it whenever the substrate exposes ``fused_conv2d`` (the
+    Pallas backends), no partitioning was requested, and the kernel taps
+    are concrete (a traced kernel cannot specialize the fused kernel);
+    ``True`` forces it (raising where unavailable); ``False`` forces the
+    im2col reference path. Both paths are bit-identical — the fused kernel
+    contracts exactly the same zero-padded tap products in the same int32
+    ring.
     """
     from repro.nn import substrate as sub
 
@@ -117,11 +127,30 @@ def conv2d_batched(imgs: Array, kernel: Array,
         imgs = imgs.transpose(0, 3, 1, 2).reshape(b * c, h, w)
     if imgs.ndim != 3:
         raise ValueError(f"imgs must be (B,H,W) or (B,H,W,C); got {imgs.shape}")
-    kernel = jnp.asarray(kernel, jnp.int32)
-    kh, kw = kernel.shape
-    patches = _im2col(imgs, kh, kw)  # (B, H, W, kh·kw)
-    spec = sub.ContractionSpec(_CONV_DIMS, partitioning=partitioning)
-    out = s.dot_general(patches, kernel.reshape(kh * kw, 1), spec)[..., 0]
+    # concreteness is judged on the caller's object: a closed-over constant
+    # kernel stays fused-eligible inside an outer jit (jnp.asarray would
+    # re-wrap it as a tracer there), while a jit *argument* falls back
+    taps_concrete = not isinstance(kernel, jax.core.Tracer)
+    kernel_arr = jnp.asarray(kernel, jnp.int32)
+    kh, kw = kernel_arr.shape
+    if fused is None:
+        fused = (partitioning is None and hasattr(s, "fused_conv2d")
+                 and taps_concrete)
+    if fused:
+        if not hasattr(s, "fused_conv2d"):
+            raise ValueError(
+                f"fused=True but substrate {s.meta.spec} has no fused conv "
+                "kernel (only the Pallas backends do); use fused=False")
+        if partitioning is not None:
+            raise ValueError(
+                "fused=True is incompatible with partitioning — the fused "
+                "kernel contracts K in full inside one device kernel")
+        out = s.fused_conv2d(imgs, kernel)
+    else:
+        patches = _im2col(imgs, kh, kw)  # (B, H, W, kh·kw)
+        spec = sub.ContractionSpec(_CONV_DIMS, partitioning=partitioning)
+        out = s.dot_general(patches, kernel_arr.reshape(kh * kw, 1),
+                            spec)[..., 0]
     if nhwc:
         out = out.reshape(b, c, h, w).transpose(0, 2, 3, 1)
     return out

@@ -46,10 +46,13 @@ Registered backends (``list_substrates()``):
 * ``approx_pallas``   — the tiled Pallas TPU kernels, interpret-mode
                         fallback off-TPU; bit-identical to
                         ``approx_bitexact``. Any wiring at widths 3..8:
-                        ``proposed``@8 runs the closed-form kernel
-                        (``kernels/approx_matmul``), every other
-                        wiring/width the LUT-input kernel
-                        (``kernels/lut_matmul``).
+                        CSP wirings run a *generated* closed-form VPU
+                        kernel (``kernels.closed_form.make_closed_form``
+                        through ``kernels/approx_matmul``); non-CSP product
+                        models (``"exact"``) fall back to the LUT-input
+                        kernel (``kernels/lut_matmul``). Convolutions take
+                        the fused in-kernel-im2col path
+                        (``kernels/fused_conv``) via ``fused_conv2d``.
 
 Spec grammar — ``"backend[:mult_name[@N]]"`` — selects a backend, a
 multiplier wiring, and an operand width at once:
@@ -904,21 +907,31 @@ class StatSubstrate(_SubstrateBase):
 class PallasSubstrate(_SubstrateBase):
     """Tiled Pallas TPU contraction for any wiring at widths 3..8.
 
-    Two kernels behind one spec family, both bit-identical to
+    Two kernel strategies behind one spec family, both bit-identical to
     ``approx_bitexact`` at the same wiring/width and both running in
     interpret mode off-TPU so the code path is testable on CPU:
 
-    * ``proposed``@8 — the closed-form kernel (``kernels/approx_matmul``),
-      ~25 VPU integer ops per product (fast path, cost hint ``vpu``);
-    * everything else — the LUT-input kernel (``kernels/lut_matmul``): the
-      scalar product is one gather into the wiring's flat (2^N · 2^N,)
-      product table, VMEM-resident for N ≤ 8 (cost hint ``gather``).
+    * ``"closed_form"`` — the wiring's *generated* closed form
+      (``kernels.closed_form.make_closed_form``), pure VPU integer algebra
+      through the vectorized-k-slab ``kernels/approx_matmul`` (cost hint
+      ``vpu``). The default for every CSP wiring at every width 3..8 —
+      non-proposed wirings no longer pay a per-product gather.
+    * ``"lut"`` — the LUT-input kernel (``kernels/lut_matmul``): one
+      gather per product into the wiring's flat (2^N · 2^N,) product
+      table, VMEM-resident for N ≤ 8 (cost hint ``gather``). The
+      automatic fallback for product models with no CSP closed form
+      (``"exact"``); forceable with ``kernel="lut"`` for A/B benchmarks.
 
-    Widths above ``MAX_LUT_BITS`` are rejected — the LUT kernel needs an
-    enumerable product table; use ``approx_bitexact`` for wider operands.
+    Convolutions additionally expose :meth:`fused_conv2d` — the fused
+    in-kernel-im2col conv (``kernels/fused_conv``) that
+    ``nn.conv.conv2d_batched`` auto-selects as its fast path.
+
+    Widths above ``MAX_LUT_BITS`` are rejected — f(0,0) bookkeeping and
+    the LUT fallback need an enumerable product table; use
+    ``approx_bitexact`` for wider operands.
     """
 
-    def __init__(self, mult_name: str | None = None):
+    def __init__(self, mult_name: str | None = None, kernel: str = "auto"):
         base, n = _split_suffix(mult_name)
         key, _, n = mult.resolve_multiplier(base, n)
         if n > lut_lib.MAX_LUT_BITS:
@@ -926,35 +939,57 @@ class PallasSubstrate(_SubstrateBase):
                 "approx_pallas needs an enumerable product table for its "
                 f"LUT kernel (width <= {lut_lib.MAX_LUT_BITS}, got {n}); "
                 "use approx_bitexact for wider operands")
+        if kernel not in ("auto", "closed_form", "lut"):
+            raise ValueError(
+                f"unknown approx_pallas kernel strategy {kernel!r} "
+                "(known: auto, closed_form, lut)")
         self._key = key
         self._f00 = int(lut_lib.f00(key))
-        self._closed_form = base == "proposed" and n == mult.N_BITS
+        self._product_fn = None
+        if kernel in ("auto", "closed_form"):
+            from repro.kernels.closed_form import make_closed_form
+
+            try:
+                self._product_fn = make_closed_form(key)
+            except ValueError:  # no CSP structure (e.g. "exact")
+                if kernel == "closed_form":
+                    raise
+        self._kernel_kind = "closed_form" if self._product_fn else "lut"
         self.meta = SubstrateMeta(
             "approx_pallas", base, bit_exact=True, scalar_faithful=True,
             preferred_backend="tpu",
-            cost_hint="vpu" if self._closed_form else "gather", width=n)
+            cost_hint="vpu" if self._product_fn else "gather", width=n)
 
     def _table(self) -> Array:
         return jnp.asarray(lut_lib.flat_lut(self._key))
 
     def scalar(self, a, b):
-        if self._closed_form:
-            from repro.kernels.closed_form import approx_product_i32
-
-            return approx_product_i32(a, b)
+        if self._product_fn is not None:
+            return self._product_fn(a, b)
         return lut_lib.lut_multiply(
             a, b, jnp.asarray(lut_lib.build_lut(self._key)))
 
     def dot_int(self, a, b):
         a = jnp.asarray(a, jnp.int32)
         b = jnp.asarray(b, jnp.int32)
-        if self._closed_form:
-            from repro.kernels.approx_matmul.ops import approx_matmul
+        if self._product_fn is not None:
+            from repro.kernels.approx_matmul.ops import closed_form_matmul
 
-            return approx_matmul(a, b)
+            return closed_form_matmul(a, b, self._key)
         from repro.kernels.lut_matmul.ops import lut_matmul
 
         return lut_matmul(a, b, self._table())
+
+    def fused_conv2d(self, imgs: Array, kernel: Array) -> Array:
+        """Fused in-kernel-im2col conv (``kernels/fused_conv``): batched
+        'same' conv with no host-side patch tensor, bit-identical to the
+        im2col + ``dot_general`` path. The kernel taps must be concrete
+        (they specialize the Pallas kernel) — ``conv.conv2d_batched``
+        guards this and falls back to im2col for traced kernels."""
+        from repro.kernels.fused_conv.ops import fused_conv2d
+
+        return fused_conv2d(imgs, kernel, self._key,
+                            kernel_kind=self._kernel_kind)
 
 
 # ---------------------------------------------------------------------------

@@ -13,8 +13,8 @@ from repro.kernels.approx_mul.ops import approx_mul
 from repro.kernels.approx_mul.ref import approx_mul_ref
 from repro.kernels.approx_matmul.ops import approx_matmul
 from repro.kernels.approx_matmul.ref import approx_matmul_ref
-from repro.kernels.laplacian_conv.ops import laplacian_conv
-from repro.kernels.laplacian_conv.ref import laplacian_conv_ref
+from repro.kernels.fused_conv.ops import fused_conv2d
+from repro.kernels.fused_conv.ref import laplacian_conv_ref
 
 RNG = np.random.default_rng(1234)
 
@@ -68,18 +68,24 @@ def test_approx_matmul_blocks():
 
 
 @pytest.mark.parametrize("shape", [(3, 3), (8, 8), (45, 61), (64, 64), (65, 129)])
-def test_laplacian_conv_shapes(shape):
+def test_fused_conv_laplacian_shapes(shape):
+    """The fused conv kernel reproduces the absorbed laplacian_conv oracle."""
     img = _rand(shape, lo=0, hi=128)
-    np.testing.assert_array_equal(
-        np.asarray(laplacian_conv(img)), np.asarray(laplacian_conv_ref(img))
-    )
+    from repro.nn.conv import LAPLACIAN
+
+    got = np.asarray(fused_conv2d(img[None], LAPLACIAN, "proposed"))[0]
+    np.testing.assert_array_equal(got, np.asarray(laplacian_conv_ref(img)))
 
 
-def test_laplacian_conv_block_sizes():
+def test_fused_conv_block_sizes():
     img = _rand((100, 40), lo=0, hi=128)
+    from repro.nn.conv import LAPLACIAN
+
     ref = np.asarray(laplacian_conv_ref(img))
     for bh in (16, 25, 100):
-        np.testing.assert_array_equal(np.asarray(laplacian_conv(img, block_h=bh)), ref)
+        got = np.asarray(
+            fused_conv2d(img[None], LAPLACIAN, "proposed", block_h=bh))[0]
+        np.testing.assert_array_equal(got, ref)
 
 
 # ---------------------------------------------------------------------------

@@ -193,11 +193,18 @@ def test_pallas_substrate_every_wiring_width_constructs():
 
 
 def test_pallas_substrate_fast_path_vs_lut_path_metadata():
+    # every CSP wiring/width gets the generated closed-form kernel ("vpu")
     assert sub.get_substrate("approx_pallas").meta.cost_hint == "vpu"
     assert sub.get_substrate(
-        "approx_pallas:proposed@4").meta.cost_hint == "gather"
+        "approx_pallas:proposed@4").meta.cost_hint == "vpu"
     assert sub.get_substrate(
-        "approx_pallas:design_du2022").meta.cost_hint == "gather"
+        "approx_pallas:design_du2022").meta.cost_hint == "vpu"
+    # the LUT kernel remains as the non-CSP fallback and an explicit opt-in
+    assert sub.get_substrate("approx_pallas:exact").meta.cost_hint == "gather"
+    forced = sub.PallasSubstrate("design_du2022", kernel="lut")
+    assert forced.meta.cost_hint == "gather"
+    with pytest.raises(ValueError, match="unknown multiplier wiring"):
+        sub.PallasSubstrate("exact", kernel="closed_form")
 
 
 def test_pallas_substrate_rejects_unenumerable_width():

@@ -220,9 +220,9 @@ def test_edge_service_bit_identical_per_substrate(spec):
 
 
 def test_edge_service_non_proposed_pallas_spec_parity():
-    """The LUT Pallas kernel behind a full spec (wiring@width) serves
-    bit-identically to the direct pipeline — the service carries any
-    approx_pallas spec, not just the proposed@8 fast path."""
+    """The generated closed-form Pallas kernel behind a full spec
+    (wiring@width) serves bit-identically to the direct pipeline — the
+    service carries any approx_pallas spec, not just proposed@8."""
     spec = "approx_pallas:design_strollo2020@4"
     imgs = mixed_shape_batch(4, shapes=((8, 8), (12, 10)), seed=4)
     svc = EdgeDetectService(spec, max_batch_size=2, max_wait_s=1e-3,
@@ -231,7 +231,7 @@ def test_edge_service_non_proposed_pallas_spec_parity():
         outs = svc.detect(imgs)
     finally:
         svc.close()
-    assert svc.substrate.meta.cost_hint == "gather"
+    assert svc.substrate.meta.cost_hint == "vpu"  # generated closed form
     for im, out in zip(imgs, outs):
         ref = np.asarray(conv.edge_detect_batched(im[None], spec))[0]
         np.testing.assert_array_equal(out, ref, err_msg=f"{spec} {im.shape}")
