@@ -6,16 +6,34 @@ per configuration and records throughput (img/s), p50/p95 latency, and mean
 batch occupancy. One warmup request per service triggers compilation before
 metrics are reset, so the table reflects steady-state serving.
 
+Every configuration also lands in a machine-readable ``BENCH_serving.json``
+next to the repo root (the serving counterpart of ``BENCH_kernels.json``),
+including the ambient substrate-meter rollup — per-spec contraction
+counts, MACs, and estimated energy (MACs × per-op PDP) — so the perf
+trajectory carries serving numbers, not just kernel ones. ``--trace PATH``
+additionally records the serving spans (queue wait, pad, compile, execute,
+crop) as a Chrome/Perfetto trace.
+
 Standalone:  PYTHONPATH=src python benchmarks/edge_serving.py [--dry-run]
              [--substrates exact,approx_lut] [--requests 32]
+             [--json PATH] [--trace PATH]
 Harness:     python -m benchmarks.run --only serve_edge
 """
 from __future__ import annotations
 
 import argparse
+import json
+import pathlib
+
+import jax
 
 from repro.data import image_batch
+from repro.obs import (ContractionMeter, MetricsRegistry, Tracer,
+                       telemetry_scope, tracing_scope, write_chrome_trace)
 from repro.serving import EdgeDetectService
+
+_REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+DEFAULT_JSON = _REPO_ROOT / "BENCH_serving.json"
 
 # (max_batch_size, max_wait_s) flush-policy sweep
 SETTINGS = ((1, 0.0), (4, 0.002), (8, 0.002), (8, 0.010))
@@ -38,33 +56,70 @@ def _serve_once(spec: str, max_batch: int, max_wait_s: float,
         svc.close()
 
 
-def run(substrates=None, dry_run: bool = False, n_requests: int = 32) -> list:
+def run(substrates=None, dry_run: bool = False, n_requests: int = 32,
+        json_path=DEFAULT_JSON, trace_path=None) -> list:
     specs = list(substrates) if substrates else list(DEFAULT_SUBSTRATES)
     settings = SETTINGS
     if dry_run:
         specs, settings, n_requests = specs[:1], SETTINGS[1:2], 6
     imgs = image_batch(n_requests, 32, 32, noise=1.5)
 
+    tracer = Tracer() if trace_path else None
+    meter = ContractionMeter(MetricsRegistry())
     rows = []
+    records: list[dict] = []
     print("\n== edge serving: throughput vs {substrate, batch, timeout} ==")
     print(f"{'substrate':>16s} {'batch':>5s} {'wait_ms':>7s} {'img/s':>8s} "
           f"{'p50_ms':>7s} {'p95_ms':>7s} {'occ':>5s}")
-    for spec in specs:
-        for max_batch, wait_s in settings:
-            s = _serve_once(spec, max_batch, wait_s, imgs)
-            assert s["requests_served"] == n_requests, s
-            thrpt = s["throughput_rps"]
-            us = 1e6 / thrpt if thrpt > 0 else float("inf")
-            print(f"{spec:>16s} {max_batch:>5d} {wait_s * 1e3:>7.1f} "
-                  f"{thrpt:>8.1f} {s['latency_p50_ms']:>7.2f} "
-                  f"{s['latency_p95_ms']:>7.2f} {s['mean_occupancy']:>5.2f}")
-            rows.append((
-                f"serve_edge/{spec}/b{max_batch}/w{wait_s * 1e3:g}ms", us,
-                f"thrpt={thrpt:.1f}img/s "
-                f"p50={s['latency_p50_ms']:.2f}ms "
-                f"p95={s['latency_p95_ms']:.2f}ms "
-                f"p99={s['latency_p99_ms']:.2f}ms "
-                f"occ={s['mean_occupancy']:.2f}"))
+    with tracing_scope(tracer), telemetry_scope(meter):
+        for spec in specs:
+            for max_batch, wait_s in settings:
+                s = _serve_once(spec, max_batch, wait_s, imgs)
+                assert s["requests_served"] == n_requests, s
+                thrpt = s["throughput_rps"]
+                us = 1e6 / thrpt if thrpt > 0 else float("inf")
+                print(f"{spec:>16s} {max_batch:>5d} {wait_s * 1e3:>7.1f} "
+                      f"{thrpt:>8.1f} {s['latency_p50_ms']:>7.2f} "
+                      f"{s['latency_p95_ms']:>7.2f} "
+                      f"{s['mean_occupancy']:>5.2f}")
+                rows.append((
+                    f"serve_edge/{spec}/b{max_batch}/w{wait_s * 1e3:g}ms", us,
+                    f"thrpt={thrpt:.1f}img/s "
+                    f"p50={s['latency_p50_ms']:.2f}ms "
+                    f"p95={s['latency_p95_ms']:.2f}ms "
+                    f"p99={s['latency_p99_ms']:.2f}ms "
+                    f"occ={s['mean_occupancy']:.2f}"))
+                records.append({
+                    "spec": spec, "max_batch": max_batch,
+                    "max_wait_ms": wait_s * 1e3,
+                    "requests": n_requests,
+                    "throughput_img_s": round(thrpt, 2),
+                    "latency_p50_ms": round(s["latency_p50_ms"], 3),
+                    "latency_p95_ms": round(s["latency_p95_ms"], 3),
+                    "latency_p99_ms": round(s["latency_p99_ms"], 3),
+                    "mean_occupancy": round(s["mean_occupancy"], 3),
+                    "batches_flushed": s["batches_flushed"],
+                    "batches_by_reason": s["batches_by_reason"],
+                    "compiled_calls": s["compiled_calls"],
+                })
+
+    if json_path:
+        payload = {
+            "bench": "edge_serving",
+            "backend": jax.default_backend(),
+            "dry_run": bool(dry_run),
+            "image_shape": [32, 32],
+            "records": records,
+            # ambient-meter rollup over the whole sweep (includes warmup):
+            # per-spec contraction counts, MACs, estimated energy in fJ
+            "substrate_meter": meter.summary(),
+        }
+        pathlib.Path(json_path).write_text(json.dumps(payload, indent=1)
+                                           + "\n")
+        print(f"\nwrote {len(records)} records to {json_path}")
+    if trace_path:
+        p = write_chrome_trace(tracer, trace_path)
+        print(f"wrote {len(tracer.events())} trace events to {p}")
     return rows
 
 
@@ -75,10 +130,15 @@ def main() -> None:
     ap.add_argument("--substrates", default=None,
                     help="CSV of substrate specs (default: CPU-feasible set)")
     ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--json", default=str(DEFAULT_JSON), dest="json_path",
+                    help="output path for BENCH_serving.json ('' disables)")
+    ap.add_argument("--trace", default=None, dest="trace_path",
+                    help="write a Chrome/Perfetto trace of the serving spans")
     args = ap.parse_args()
     substrates = args.substrates.split(",") if args.substrates else None
     rows = run(substrates=substrates, dry_run=args.dry_run,
-               n_requests=args.requests)
+               n_requests=args.requests, json_path=args.json_path or None,
+               trace_path=args.trace_path)
     print("\nname,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")

@@ -7,6 +7,13 @@ benches (fig9, kernel) default to every substrate registered in
 ``repro.nn.substrate``; ``--sharded`` adds the kernel bench's
 ``dot_general`` + ``Partitioning`` rows (sweeps sharded contractions over a
 mesh of every visible device — the TPU-native run's sharded sweep).
+
+Machine-readable artifacts: the ``kernel`` bench writes
+``BENCH_kernels.json`` and the ``serve_edge`` bench writes
+``BENCH_serving.json`` (throughput/latency records + the substrate-meter
+energy rollup) at the repo root, so one ``python -m benchmarks.run``
+produces the full perf trajectory. Trace files are opt-in via each bench's
+standalone ``--trace`` flag.
 """
 from __future__ import annotations
 

@@ -5,8 +5,15 @@ on a chosen product substrate, verifies every served edge map is
 bit-identical to the direct batched pipeline, and prints the telemetry
 table (throughput, latency percentiles, batch occupancy).
 
+``--metrics-out`` dumps the combined metrics registry (serving counters +
+per-contraction substrate meters; ``.prom``/``.txt`` → Prometheus text,
+else JSON) and ``--trace-out`` records the serving spans (queue wait, pad,
+compile, execute, crop) as a Chrome/Perfetto trace — CI smoke-validates
+both artifacts. See ``docs/observability.md``.
+
 Run:  PYTHONPATH=src python examples/serve_edge.py [--smoke]
       [--substrate approx_lut:design_du2022] [--requests 24]
+      [--metrics-out serve.json] [--trace-out trace.json]
 """
 import argparse
 
@@ -14,7 +21,11 @@ import numpy as np
 
 from repro.data import mixed_shape_batch
 from repro.nn import conv
+from repro.obs import (ContractionMeter, MetricsRegistry, Tracer,
+                       telemetry_scope, tracing_scope, write_chrome_trace,
+                       write_metrics)
 from repro.serving import EdgeDetectService
+from repro.serving.metrics import ServingMetrics
 
 
 def main():
@@ -27,6 +38,12 @@ def main():
     ap.add_argument("--max-wait-ms", type=float, default=5.0)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny fast run for CI (few small images)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="dump the combined metrics registry (.prom/.txt → "
+                         "Prometheus text, else JSON)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome/Perfetto trace-event JSON of the "
+                         "serving spans")
     args = ap.parse_args()
 
     if args.smoke:
@@ -36,14 +53,21 @@ def main():
     else:
         imgs = mixed_shape_batch(args.requests, noise=2.0)
 
-    svc = EdgeDetectService(args.substrate, max_batch_size=args.max_batch,
-                            max_wait_s=args.max_wait_ms * 1e-3)
-    print(f"serving {len(imgs)} mixed-shape images on "
-          f"substrate={svc.spec!r} (max_batch={args.max_batch}, "
-          f"max_wait={args.max_wait_ms}ms)")
+    # one shared registry: serving counters + substrate meters, one dump
+    registry = MetricsRegistry()
+    meter = ContractionMeter(registry)
+    tracer = Tracer() if args.trace_out else None
+    with tracing_scope(tracer), telemetry_scope(meter):
+        svc = EdgeDetectService(args.substrate,
+                                max_batch_size=args.max_batch,
+                                max_wait_s=args.max_wait_ms * 1e-3,
+                                metrics=ServingMetrics(registry=registry))
+        print(f"serving {len(imgs)} mixed-shape images on "
+              f"substrate={svc.spec!r} (max_batch={args.max_batch}, "
+              f"max_wait={args.max_wait_ms}ms)")
 
-    outs = svc.detect(imgs)
-    svc.close()
+        outs = svc.detect(imgs)
+        svc.close()
 
     # every served map must be bit-identical to the direct batched pipeline
     for im, out in zip(imgs, outs):
@@ -56,6 +80,20 @@ def main():
     print(f"compiled bucket shapes: {list(svc.compiled_shapes)}")
     print()
     print(svc.metrics.format_table())
+    summary = meter.summary()
+    if summary:
+        print()
+        for spec, row in sorted(summary.items()):
+            print(f"meter      {spec}: {row['contractions']} contractions, "
+                  f"{row['macs']} MACs, "
+                  f"{row['energy_pdp_fj'] / 1e6:.2f} nJ est.")
+    if args.metrics_out:
+        p = write_metrics(registry, args.metrics_out,
+                          extra={"substrate_meter": summary})
+        print(f"metrics -> {p}")
+    if args.trace_out:
+        p = write_chrome_trace(tracer, args.trace_out)
+        print(f"trace -> {p} ({len(tracer.events())} events)")
 
 
 if __name__ == "__main__":

@@ -19,6 +19,7 @@ from repro.core import multiplier as mult
 from repro.kernels import blocking
 from repro.kernels.approx_matmul.kernel import approx_matmul_pallas
 from repro.kernels.closed_form import closed_form_f00, make_closed_form
+from repro.obs.trace import trace_span
 
 
 @functools.lru_cache(maxsize=None)
@@ -35,6 +36,17 @@ def _f00() -> int:
 
 @functools.partial(jax.jit,
                    static_argnames=("block_m", "block_n", "block_k", "k_chunk"))
+def _approx_matmul_jit(a, b, block_m, block_n, block_k, k_chunk):
+    a = jnp.asarray(a, jnp.int32)
+    b = jnp.asarray(b, jnp.int32)
+    return blocking.pad_crop_correct(
+        a, b, _f00(),
+        lambda ap, bp, bm, bn, bk: approx_matmul_pallas(
+            ap, bp, block_m=bm, block_n=bn, block_k=bk, k_chunk=k_chunk,
+            interpret=blocking.resolve_interpret()),
+        block_m=block_m, block_n=block_n, block_k=block_k)
+
+
 def approx_matmul(a, b, block_m: int = 128, block_n: int = 128,
                   block_k: int = 128, k_chunk: int = 8):
     """(M,K) @ (K,N) under the proposed approximate multiplier.
@@ -45,14 +57,9 @@ def approx_matmul(a, b, block_m: int = 128, block_n: int = 128,
     ``k_chunk=1`` recovers the pre-vectorization scalar k-walk (kept as the
     benchmark baseline).
     """
-    a = jnp.asarray(a, jnp.int32)
-    b = jnp.asarray(b, jnp.int32)
-    return blocking.pad_crop_correct(
-        a, b, _f00(),
-        lambda ap, bp, bm, bn, bk: approx_matmul_pallas(
-            ap, bp, block_m=bm, block_n=bn, block_k=bk, k_chunk=k_chunk,
-            interpret=blocking.resolve_interpret()),
-        block_m=block_m, block_n=block_n, block_k=block_k)
+    (m, k), (_, n) = jnp.shape(a), jnp.shape(b)
+    with trace_span("kernel.approx_matmul", "kernel", m=m, k=k, n=n):
+        return _approx_matmul_jit(a, b, block_m, block_n, block_k, k_chunk)
 
 
 @functools.lru_cache(maxsize=None)
@@ -85,6 +92,9 @@ def closed_form_matmul(a, b, mult_key: str = "proposed", *,
     contract as :func:`approx_matmul`; the jitted runner is cached per
     (wiring, block sizes, k_chunk).
     """
-    run = _closed_form_runner(mult.canonical_key(mult_key),
-                              block_m, block_n, block_k, k_chunk)
-    return run(a, b)
+    key = mult.canonical_key(mult_key)
+    run = _closed_form_runner(key, block_m, block_n, block_k, k_chunk)
+    (m, k), (_, n) = jnp.shape(a), jnp.shape(b)
+    with trace_span("kernel.closed_form_matmul", "kernel", mult=key,
+                    m=m, k=k, n=n):
+        return run(a, b)

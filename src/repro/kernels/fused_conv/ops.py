@@ -32,6 +32,7 @@ from repro.core import multiplier as mult
 from repro.kernels import blocking
 from repro.kernels.closed_form import make_closed_form
 from repro.kernels.fused_conv.kernel import fused_conv_pallas
+from repro.obs.trace import trace_span
 
 KERNEL_KINDS = ("auto", "closed_form", "lut")
 
@@ -101,6 +102,10 @@ def fused_conv2d(imgs, kernel, mult_key: str = "proposed", *,
     the im2col + ``dot_general`` path, which this is bit-identical to.
     """
     taps = tuple(tuple(int(c) for c in row) for row in np.asarray(kernel))
-    run = _fused_runner(mult.canonical_key(mult_key), kernel_kind, taps,
-                        block_h, blocking.resolve_interpret(interpret))
-    return run(imgs)
+    key = mult.canonical_key(mult_key)
+    run = _fused_runner(key, kernel_kind, taps, block_h,
+                        blocking.resolve_interpret(interpret))
+    shape = jnp.shape(imgs)
+    with trace_span("kernel.fused_conv2d", "kernel", mult=key,
+                    shape="x".join(map(str, shape))):
+        return run(imgs)

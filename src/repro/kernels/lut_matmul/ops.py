@@ -8,10 +8,9 @@ import jax.numpy as jnp
 
 from repro.kernels import blocking
 from repro.kernels.lut_matmul.kernel import lut_matmul_pallas, table_width
+from repro.obs.trace import trace_span
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("block_m", "block_n", "block_k", "k_chunk"))
 def lut_matmul(a, b, table, block_m: int = 128, block_n: int = 128,
                block_k: int = 128, k_chunk: int = 8):
     """(M,K) @ (K,N) under the approximate multiplier defined by ``table``.
@@ -24,6 +23,15 @@ def lut_matmul(a, b, table, block_m: int = 128, block_n: int = 128,
     and subtracted back. ``k_chunk=1`` recovers the pre-vectorization
     per-k gather walk (kept as the benchmark baseline).
     """
+    (m, k), (_, n) = jnp.shape(a), jnp.shape(b)
+    with trace_span("kernel.lut_matmul", "kernel", m=m, k=k, n=n):
+        return _lut_matmul_jit(a, b, table, block_m, block_n, block_k,
+                               k_chunk)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_m", "block_n", "block_k", "k_chunk"))
+def _lut_matmul_jit(a, b, table, block_m, block_n, block_k, k_chunk):
     a = jnp.asarray(a, jnp.int32)
     b = jnp.asarray(b, jnp.int32)
     table = jnp.asarray(table, jnp.int32)

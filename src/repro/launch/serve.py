@@ -3,6 +3,11 @@
 Runs the batched serving engine with synthetic requests (reduced configs on
 CPU; full-scale serving graphs are exercised by the dry-run's prefill /
 decode lowering).
+
+Telemetry: ``--metrics-out`` dumps the engine's metrics registry
+(Prometheus text for ``.prom``/``.txt`` paths, JSON otherwise) and
+``--trace-out`` writes a Chrome/Perfetto trace of the serving spans —
+load it at ``ui.perfetto.dev``. See ``docs/observability.md``.
 """
 from __future__ import annotations
 
@@ -14,6 +19,7 @@ import numpy as np
 
 from repro.launch.train import add_reduced_overrides, overrides_from
 from repro.models import registry as reg
+from repro.obs import Tracer, tracing_scope, write_chrome_trace, write_metrics
 from repro.serving import ServingEngine
 from repro.serving.engine import Request
 
@@ -25,6 +31,12 @@ def main():
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--max-tokens", type=int, default=8)
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="dump serving metrics (.prom/.txt → Prometheus "
+                         "text, else JSON)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome/Perfetto trace-event JSON of the "
+                         "serving spans")
     add_reduced_overrides(ap)
     args = ap.parse_args()
 
@@ -39,14 +51,22 @@ def main():
                     max_tokens=args.max_tokens,
                     temperature=0.0 if i % 2 == 0 else 0.8)
             for i in range(args.requests)]
-    t0 = time.time()
-    out = engine.generate(reqs)
-    dt = time.time() - t0
+    tracer = Tracer() if args.trace_out else None
+    t0 = time.perf_counter()
+    with tracing_scope(tracer):
+        out = engine.generate(reqs)
+    dt = time.perf_counter() - t0
     total_tokens = sum(len(r.output) for r in out)
     for i, r in enumerate(out):
         print(f"req{i}: prompt={r.prompt} -> {r.output}")
     print(f"[serve] {total_tokens} tokens in {dt:.2f}s "
           f"({total_tokens / max(dt, 1e-9):.1f} tok/s)")
+    if args.metrics_out:
+        p = write_metrics(engine.metrics.registry, args.metrics_out)
+        print(f"[serve] metrics -> {p}")
+    if args.trace_out:
+        p = write_chrome_trace(tracer, args.trace_out)
+        print(f"[serve] trace -> {p} ({len(tracer.events())} events)")
 
 
 if __name__ == "__main__":

@@ -91,6 +91,30 @@ def _im2col(imgs: Array, kh: int, kw: int) -> Array:
 _CONV_DIMS = (((3,), (0,)), ((), ()))
 
 
+def _meter_fused(s, imgs: Array, kernel_arr: Array) -> None:
+    """Telemetry for the fused conv path, which bypasses ``dot_general``.
+
+    Records the contraction the fused kernel performs — per pixel, one
+    tap-axis dot: ``(B, H·W, kh·kw) @ (kh·kw, 1)`` — on the ambient meter,
+    so fused and im2col runs report identical MAC/energy totals. The
+    opt-in error probe samples a small leading-rows im2col slab (the
+    fused kernel contracts the same zero-padded tap products, so the
+    per-product error model is the same).
+    """
+    from repro.obs.meter import current_meter
+
+    meter = current_meter()
+    if meter is None:
+        return
+    b, h, w = imgs.shape
+    kh, kw = kernel_arr.shape
+    meter.record_contraction(s.meta, b, h * w, kh * kw, 1)
+    if meter.error_probe and s.meta.mult_name != "exact":
+        slab = _im2col(imgs[:1, :8], kh, kw)  # (1, ≤8, W, taps)
+        meter.probe(s.meta, s.scalar, slab.reshape(1, -1, kh * kw),
+                    kernel_arr.reshape(1, kh * kw, 1))
+
+
 def conv2d_batched(imgs: Array, kernel: Array,
                    substrate: "str | object" = "approx_bitexact",
                    partitioning=None, fused: "bool | None" = None) -> Array:
@@ -145,6 +169,7 @@ def conv2d_batched(imgs: Array, kernel: Array,
             raise ValueError(
                 "fused=True is incompatible with partitioning — the fused "
                 "kernel contracts K in full inside one device kernel")
+        _meter_fused(s, imgs, kernel_arr)
         out = s.fused_conv2d(imgs, kernel)
     else:
         patches = _im2col(imgs, kh, kw)  # (B, H, W, kh·kw)

@@ -103,6 +103,7 @@ import numpy as np
 from repro.core import lut as lut_lib
 from repro.core import multiplier as mult
 from repro.nn import quant
+from repro.obs.meter import current_meter as _current_meter
 
 Array = jnp.ndarray
 
@@ -613,6 +614,26 @@ class _SubstrateBase:
         """Cast integer operands to the width's storage dtype (int8/int16)."""
         return jnp.asarray(x, quant.storage_dtype(self.meta.width))
 
+    # -- telemetry -----------------------------------------------------------
+
+    def _meter_hook(self, plan: "_Plan", a3: Optional[Array],
+                    b3: Optional[Array]) -> None:
+        """Record this contraction on the ambient telemetry meter, if any.
+
+        One global read when no :func:`repro.obs.meter.telemetry_scope`
+        is active — the metered path is purely additive (counts / MACs /
+        estimated energy, plus the opt-in error probe on integer
+        operands), so outputs are bit-identical either way.
+        """
+        meter = _current_meter()
+        if meter is None:
+            return
+        meter.record_contraction(self.meta, plan.b, plan.m, plan.k, plan.n)
+        if (meter.error_probe and a3 is not None
+                and self.meta.mult_name != "exact"
+                and jnp.issubdtype(a3.dtype, jnp.integer)):
+            meter.probe(self.meta, self.scalar, a3, b3)
+
     # -- the contraction surface ---------------------------------------------
 
     def dot_general(self, x: Array, w: Array,
@@ -636,8 +657,9 @@ class _SubstrateBase:
                     "integer-domain dot_general (spec.quant=None) needs "
                     f"integer operands, got {x.dtype}/{w.dtype}; pass a "
                     "QuantPolicy to contract float tensors")
-            out3 = self._contract3(plan.lhs3(x), plan.rhs3(w),
-                                   spec.partitioning)
+            a3, b3 = plan.lhs3(x), plan.rhs3(w)
+            self._meter_hook(plan, a3, b3)
+            out3 = self._contract3(a3, b3, spec.partitioning)
             return plan.unflatten(out3)
         q = spec.quant
         bits = q.bits if q.bits is not None else self.meta.width
@@ -650,6 +672,7 @@ class _SubstrateBase:
                                    contract_axis=2, bits=bits, eps=q.eps)
         qb, sb = _quantize_operand(plan.rhs3(w), q.w_mode, q.w_scale,
                                    contract_axis=1, bits=bits, eps=q.eps)
+        self._meter_hook(plan, qa, qb)
         out3 = self._contract3(qa, qb, spec.partitioning)
         out3 = out3.astype(jnp.float32) * (sa * sb)
         return plan.unflatten(out3).astype(x.dtype)
@@ -765,6 +788,7 @@ class ExactSubstrate(_SubstrateBase):
             # contract in the compute dtype (the historical `dot`)
             w = jnp.asarray(w, x.dtype)
             plan = _plan_contraction(x.shape, w.shape, spec.dimension_numbers)
+            self._meter_hook(plan, None, None)  # float path: no probe
             if spec.partitioning is None:
                 return jax.lax.dot_general(x, w, plan.dims)
             if plan.b != 1:

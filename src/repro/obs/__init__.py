@@ -1,0 +1,30 @@
+"""Observability layer: metrics registry, tracing, substrate meters.
+
+The measurement substrate the rest of the repo records into. See
+``docs/observability.md`` for the tour; the short map:
+
+* :mod:`repro.obs.registry` — thread-safe labeled Counter/Gauge/Histogram
+  families with JSON + Prometheus-text export;
+* :mod:`repro.obs.trace` — nestable spans, Chrome/Perfetto trace export,
+  ambient :func:`tracing_scope` / :func:`trace_span`;
+* :mod:`repro.obs.meter` — per-contraction MAC/energy/error meters hooked
+  into ``ProductSubstrate.dot_general`` via :func:`telemetry_scope`;
+* :mod:`repro.obs.export` — file dump helpers for both.
+
+Everything is zero-overhead-by-default: with no ambient scope installed,
+instrumented code paths do one global read and nothing else.
+"""
+from repro.obs.export import write_chrome_trace, write_metrics
+from repro.obs.meter import (ContractionMeter, current_meter, pdp_per_mac_fj,
+                             telemetry_scope)
+from repro.obs.registry import (DEFAULT_BUCKETS, Counter, Gauge, Histogram,
+                                MetricsRegistry)
+from repro.obs.trace import (JsonlSink, Tracer, current_tracer, trace_span,
+                             tracing_scope)
+
+__all__ = [
+    "MetricsRegistry", "Counter", "Gauge", "Histogram", "DEFAULT_BUCKETS",
+    "Tracer", "JsonlSink", "tracing_scope", "current_tracer", "trace_span",
+    "ContractionMeter", "telemetry_scope", "current_meter", "pdp_per_mac_fj",
+    "write_metrics", "write_chrome_trace",
+]

@@ -22,6 +22,7 @@ import threading
 import time
 from typing import Any, Callable, Dict, Hashable, Iterable, List, Optional, Tuple
 
+from repro.obs.trace import current_tracer, trace_span
 from repro.serving.metrics import ServingMetrics
 
 
@@ -248,8 +249,19 @@ class MicroBatcher:
 
     def _serve(self, key: Hashable, batch: List[Ticket], reason: str) -> None:
         self.metrics.record_batch(len(batch), reason, self.max_batch_size)
+        tracer = current_tracer()
+        if tracer is not None:
+            # retroactive span: the head ticket's time in queue. Only
+            # meaningful when the batcher runs on the tracer's clock
+            # (both default to time.perf_counter).
+            head = min(t.enqueued_at for t in batch)
+            tracer.event("batch.queue_wait", head, self._clock() - head,
+                         "serving", bucket=str(key), size=len(batch),
+                         reason=reason)
         try:
-            results = self.process_fn(key, [t.payload for t in batch])
+            with trace_span("batch.process", "serving", bucket=str(key),
+                            size=len(batch), reason=reason):
+                results = self.process_fn(key, [t.payload for t in batch])
             if len(results) != len(batch):
                 raise RuntimeError(
                     f"process_fn returned {len(results)} results for "

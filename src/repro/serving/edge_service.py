@@ -35,6 +35,7 @@ import numpy as np
 
 from repro.nn import conv
 from repro.nn import substrate as sub
+from repro.obs.trace import trace_span
 from repro.serving.batcher import MicroBatcher, Ticket
 from repro.serving.metrics import ServingMetrics
 
@@ -110,16 +111,27 @@ class EdgeDetectService:
         hh, ww = bucket
         b = len(imgs)
         bp = self.batcher.max_batch_size if self.pad_batches else b
-        batch = np.zeros((bp, hh, ww), np.uint8)
-        for i, im in enumerate(imgs):
-            h, w = im.shape
-            batch[i, :h, :w] = im
+        with trace_span("edge.pad", "serving", bucket=f"{hh}x{ww}", size=b):
+            batch = np.zeros((bp, hh, ww), np.uint8)
+            for i, im in enumerate(imgs):
+                h, w = im.shape
+                batch[i, :h, :w] = im
+        shape = "x".join(map(str, batch.shape))
         if batch.shape not in self._compiled_keys:
             self._compiled_keys.add(batch.shape)
             self.metrics.record_compile()
-        out = np.asarray(self._jit_fn(batch))
-        return [out[i, :im.shape[0], :im.shape[1]]
-                for i, im in enumerate(imgs)]
+            # first call for this shape: the jitted call traces + compiles
+            # before executing, so this span is compile-dominated
+            with trace_span("edge.compile", "serving", shape=shape,
+                            spec=self.spec):
+                out = np.asarray(self._jit_fn(batch))
+        else:
+            with trace_span("edge.execute", "serving", shape=shape,
+                            spec=self.spec):
+                out = np.asarray(self._jit_fn(batch))
+        with trace_span("edge.crop", "serving", size=b):
+            return [out[i, :im.shape[0], :im.shape[1]]
+                    for i, im in enumerate(imgs)]
 
     @staticmethod
     def _check_image(img) -> np.ndarray:

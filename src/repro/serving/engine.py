@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs.trace import trace_span
 from repro.serving.batcher import SlotScheduler
 from repro.serving.metrics import ServingMetrics
 
@@ -44,13 +45,16 @@ class Request:
 
 class ServingEngine:
     def __init__(self, bundle, params, batch_size: int = 4,
-                 max_len: int = 256, seed: int = 0, substrate=None):
+                 max_len: int = 256, seed: int = 0, substrate=None,
+                 metrics: Optional[ServingMetrics] = None):
         """substrate: optional ProductSubstrate spec string (e.g. ``"int8"``,
         ``"approx_lut:design_du2022"``) or instance overriding the bundle's
         ``cfg.dot_mode`` — the bundle is rebuilt on the overridden config so
         int8/approx serving experiments don't need a separate registry entry.
         Parameters are layout-compatible across substrates (the quantization
-        boundary is dynamic), so the same ``params`` tree is served."""
+        boundary is dynamic), so the same ``params`` tree is served.
+        metrics: optional shared :class:`ServingMetrics` (e.g. one backed by
+        a shared registry for a combined export); a private one otherwise."""
         if substrate is not None:
             from repro.models import registry as reg
             from repro.nn import substrate as psub
@@ -78,7 +82,7 @@ class ServingEngine:
         self.batch = batch_size
         self.max_len = max_len
         self.rng = np.random.default_rng(seed)
-        self.metrics = ServingMetrics()
+        self.metrics = metrics if metrics is not None else ServingMetrics()
         self._decode = jax.jit(bundle.decode_step)
         self._reset_state()
 
@@ -109,6 +113,10 @@ class ServingEngine:
 
     def generate(self, requests: List[Request]) -> List[Request]:
         """Serve a list of requests with continuous slot refill."""
+        with trace_span("serve.generate", "serving", requests=len(requests)):
+            return self._generate(requests)
+
+    def _generate(self, requests: List[Request]) -> List[Request]:
         sched = SlotScheduler(self.batch)
         t_start = {}
         for r in requests:
@@ -139,7 +147,9 @@ class ServingEngine:
                 elif r.output:
                     tokens[i] = r.output[-1]
             self.metrics.record_batch(sched.occupancy, "decode", self.batch)
-            logits = self._step(tokens, cache_len)
+            with trace_span("serve.decode_step", "serving",
+                            cache_len=cache_len, occupancy=sched.occupancy):
+                logits = self._step(tokens, cache_len)
             temps = np.array([r.temperature if r else 0.0 for r in sched.slots])
             nxt = self._sample(logits, temps)
             for i, r in sched.occupied():

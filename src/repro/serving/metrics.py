@@ -5,8 +5,17 @@ draining it, so every layer (enqueue, flush, compile, completion) records
 into the same snapshot. All methods are thread-safe — the batcher worker and
 submitting threads hit them concurrently.
 
-Latencies are kept in a bounded reservoir (uniform replacement past the cap)
-so a long-running service reports stable percentiles at O(1) memory.
+Since the observability PR the counters live in a
+:class:`repro.obs.registry.MetricsRegistry` (``serving_*`` families), so a
+serving process exports one combined Prometheus/JSON dump with the
+substrate meters by passing a shared registry. The public surface is
+unchanged: the historical attributes (``requests_served``,
+``batches_by_reason``, ``occupancy_hist``, ...) are read-only properties
+over the registry, and ``snapshot()``/``format_table()`` render the same
+shapes as before. Latencies additionally feed a bounded reservoir (uniform
+replacement past the cap) so a long-running service reports stable
+percentiles at O(1) memory — the registry histogram holds the cumulative
+bucket view for export, the reservoir answers ``latency_percentile``.
 """
 from __future__ import annotations
 
@@ -15,11 +24,22 @@ import threading
 import time
 from typing import Dict, Optional
 
+from repro.obs.registry import MetricsRegistry
+
 _RESERVOIR_CAP = 8192
+
+#: latency bucket bounds (seconds) for the exported histogram.
+_LATENCY_BUCKETS = (0.0005, 0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1,
+                    0.25, 0.5, 1.0, 2.5, 5.0, 10.0)
 
 
 class ServingMetrics:
     """Counters + latency/occupancy telemetry for a serving pipeline.
+
+    ``registry``: optional shared :class:`MetricsRegistry`; by default each
+    instance owns a private one. Two instances recording into the *same*
+    registry share series (their counts merge) — share a registry for one
+    combined export, not for isolation.
 
     Flush reasons (``batches_by_reason``):
 
@@ -28,58 +48,77 @@ class ServingMetrics:
     * ``"drain"``   — explicit flush/stop drained a partial bucket.
     """
 
-    def __init__(self, clock=time.perf_counter):
+    def __init__(self, clock=time.perf_counter,
+                 registry: Optional[MetricsRegistry] = None):
         self._lock = threading.Lock()
         self._clock = clock
         self._rng = random.Random(0)
+        self.registry = registry if registry is not None else MetricsRegistry()
+        r = self.registry
+        self._enqueued = r.counter("serving_requests_enqueued_total",
+                                   "requests submitted to the batcher")
+        self._served = r.counter("serving_requests_served_total",
+                                 "requests completed successfully")
+        self._failed = r.counter("serving_requests_failed_total",
+                                 "requests completed with an error")
+        self._batches = r.counter("serving_batches_flushed_total",
+                                  "batches flushed, by flush reason",
+                                  ("reason",))
+        self._compiles = r.counter("serving_compiled_calls_total",
+                                   "XLA compilations triggered (new shapes)")
+        self._depth = r.gauge("serving_queue_depth",
+                              "requests waiting in the batcher queue")
+        self._depth_peak = r.gauge("serving_queue_depth_peak",
+                                   "high-water mark of the batcher queue")
+        self._batch_sizes = r.counter("serving_batch_size_total",
+                                      "batches flushed, by actual size",
+                                      ("size",))
+        self._slots_used = r.counter("serving_batch_slots_used_total",
+                                     "sum of actual batch sizes")
+        self._slots_total = r.counter("serving_batch_slots_total",
+                                      "sum of max_batch_size over flushes")
+        self._latency = r.histogram("serving_request_latency_seconds",
+                                    "request latency (enqueue to done)",
+                                    buckets=_LATENCY_BUCKETS)
         self.reset()
 
     def reset(self) -> None:
         """Zero every counter and restart the throughput clock (benchmarks
-        call this after warmup so compiles don't pollute the measurement)."""
+        call this after warmup so compiles don't pollute the measurement).
+
+        Resets only this instance's ``serving_*`` families — other
+        recorders in a shared registry are untouched."""
         with self._lock:
             self.started_at = self._clock()
-            self.requests_enqueued = 0
-            self.requests_served = 0
-            self.requests_failed = 0
-            self.batches_flushed = 0
-            self.batches_by_reason: Dict[str, int] = {}
-            self.compiled_calls = 0
-            self.queue_depth = 0
-            self.queue_depth_peak = 0
-            self.occupancy_hist: Dict[int, int] = {}   # batch size -> count
-            self._occupancy_denom = 0                  # Σ max_batch / batches
-            self._occupancy_num = 0                    # Σ actual batch sizes
             self._latencies: list[float] = []          # seconds, reservoir
             self._latency_count = 0
+        for fam in (self._enqueued, self._served, self._failed, self._batches,
+                    self._compiles, self._depth, self._depth_peak,
+                    self._batch_sizes, self._slots_used, self._slots_total,
+                    self._latency):
+            fam.reset()
 
     # -- recording -----------------------------------------------------------
 
     def record_enqueue(self, depth: int) -> None:
-        with self._lock:
-            self.requests_enqueued += 1
-            self.queue_depth = depth
-            self.queue_depth_peak = max(self.queue_depth_peak, depth)
+        self._enqueued.inc()
+        self._depth.set(depth)
+        self._depth_peak.set_max(depth)
 
     def record_batch(self, size: int, reason: str,
                      max_batch_size: int) -> None:
-        with self._lock:
-            self.batches_flushed += 1
-            self.batches_by_reason[reason] = \
-                self.batches_by_reason.get(reason, 0) + 1
-            self.occupancy_hist[size] = self.occupancy_hist.get(size, 0) + 1
-            self._occupancy_num += size
-            self._occupancy_denom += max_batch_size
+        self._batches.labels(reason=reason).inc()
+        self._batch_sizes.labels(size=size).inc()
+        self._slots_used.inc(size)
+        self._slots_total.inc(max_batch_size)
 
     def record_done(self, latency_s: float, ok: bool = True,
                     depth: Optional[int] = None) -> None:
+        (self._served if ok else self._failed).inc()
+        if depth is not None:
+            self._depth.set(depth)
+        self._latency.observe(latency_s)
         with self._lock:
-            if ok:
-                self.requests_served += 1
-            else:
-                self.requests_failed += 1
-            if depth is not None:
-                self.queue_depth = depth
             self._latency_count += 1
             if len(self._latencies) < _RESERVOIR_CAP:
                 self._latencies.append(latency_s)
@@ -89,8 +128,47 @@ class ServingMetrics:
                     self._latencies[j] = latency_s
 
     def record_compile(self) -> None:
-        with self._lock:
-            self.compiled_calls += 1
+        self._compiles.inc()
+
+    # -- historical attribute surface (read-only, registry-backed) -----------
+
+    @property
+    def requests_enqueued(self) -> int:
+        return int(self._enqueued.value())
+
+    @property
+    def requests_served(self) -> int:
+        return int(self._served.value())
+
+    @property
+    def requests_failed(self) -> int:
+        return int(self._failed.value())
+
+    @property
+    def batches_flushed(self) -> int:
+        return sum(int(v) for _, v in self._batches.samples())
+
+    @property
+    def batches_by_reason(self) -> Dict[str, int]:
+        return {labels["reason"]: int(v)
+                for labels, v in self._batches.samples()}
+
+    @property
+    def compiled_calls(self) -> int:
+        return int(self._compiles.value())
+
+    @property
+    def queue_depth(self) -> int:
+        return int(self._depth.value())
+
+    @property
+    def queue_depth_peak(self) -> int:
+        return int(self._depth_peak.value())
+
+    @property
+    def occupancy_hist(self) -> Dict[int, int]:
+        return {int(labels["size"]): int(v)
+                for labels, v in self._batch_sizes.samples()}
 
     # -- derived views -------------------------------------------------------
 
@@ -105,32 +183,32 @@ class ServingMetrics:
 
     def throughput(self) -> float:
         """Requests served per second of wall clock since construction."""
-        dt = self._clock() - self.started_at
-        return self.requests_served / dt if dt > 0 else 0.0
+        with self._lock:  # started_at races with reset() otherwise
+            dt = self._clock() - self.started_at
+        served = self.requests_served
+        return served / dt if dt > 0 else 0.0
 
     def mean_occupancy(self) -> float:
         """Mean batch fill fraction: Σ size / Σ max_batch over flushes."""
-        with self._lock:
-            if not self._occupancy_denom:
-                return 0.0
-            return self._occupancy_num / self._occupancy_denom
+        denom = self._slots_total.value()
+        if not denom:
+            return 0.0
+        return self._slots_used.value() / denom
 
     def snapshot(self) -> dict:
         """Point-in-time dict of every counter + derived stats (for logs)."""
-        with self._lock:
-            hist = dict(sorted(self.occupancy_hist.items()))
-            reasons = dict(sorted(self.batches_by_reason.items()))
-            base = {
-                "requests_enqueued": self.requests_enqueued,
-                "requests_served": self.requests_served,
-                "requests_failed": self.requests_failed,
-                "batches_flushed": self.batches_flushed,
-                "batches_by_reason": reasons,
-                "compiled_calls": self.compiled_calls,
-                "queue_depth": self.queue_depth,
-                "queue_depth_peak": self.queue_depth_peak,
-                "occupancy_hist": hist,
-            }
+        base = {
+            "requests_enqueued": self.requests_enqueued,
+            "requests_served": self.requests_served,
+            "requests_failed": self.requests_failed,
+            "batches_flushed": self.batches_flushed,
+            "batches_by_reason": dict(sorted(
+                self.batches_by_reason.items())),
+            "compiled_calls": self.compiled_calls,
+            "queue_depth": self.queue_depth,
+            "queue_depth_peak": self.queue_depth_peak,
+            "occupancy_hist": dict(sorted(self.occupancy_hist.items())),
+        }
         base["mean_occupancy"] = self.mean_occupancy()
         base["throughput_rps"] = self.throughput()
         for p in (50, 95, 99):
