@@ -14,6 +14,29 @@ trajectory carries serving numbers, not just kernel ones. ``--trace PATH``
 additionally records the serving spans (queue wait, pad, compile, execute,
 crop) as a Chrome/Perfetto trace.
 
+The sweep ends with a throughput-vs-worker-count table (workers 1/2/4)
+for one substrate, in two modes per worker count:
+
+* ``host`` — the raw substrate on this host. On a single hardware thread
+  the contraction itself cannot parallelize, so this row mostly shows that
+  multi-worker adds no overhead (and stays bit-identical).
+* ``emulated`` — the service's ``device_latency_s`` knob holds each batch
+  on an emulated device for the *measured* mean host batch time (an
+  identity ``pure_callback`` stage inside the compiled call — values are
+  untouched, see ``EdgeDetectService``). This is the accelerator-shaped
+  regime the overlap design targets: device time ≳ host time, so workers
+  hide one behind the other. Every row is checked bit-identical to the
+  single-worker host reference.
+
+The worker sweep runs in a child process with
+``jax_cpu_enable_async_dispatch=False`` (the flag is only read when the
+CPU client is created, so it cannot be toggled mid-process): XLA:CPU's
+default async dispatch funnels every execution through one dispatch
+thread, which would serialize concurrent batches — an artifact of the
+host backend, not of the serving design. With synchronous dispatch each
+execution runs on its worker thread, matching how concurrent batches
+occupy a real accelerator.
+
 Standalone:  PYTHONPATH=src python benchmarks/edge_serving.py [--dry-run]
              [--substrates exact,approx_lut] [--requests 32]
              [--json PATH] [--trace PATH]
@@ -23,9 +46,13 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import pathlib
+import subprocess
+import sys
 
 import jax
+import numpy as np
 
 from repro.data import image_batch
 from repro.obs import (ContractionMeter, MetricsRegistry, Tracer,
@@ -43,6 +70,14 @@ SETTINGS = ((1, 0.0), (4, 0.002), (8, 0.002), (8, 0.010))
 DEFAULT_SUBSTRATES = ("exact", "int8", "approx_lut", "approx_stat")
 
 
+#: worker counts for the throughput-vs-worker-count table
+WORKER_COUNTS = (1, 2, 4)
+
+#: flush policy used by the worker sweep (batch 4 → several in-flight
+#: batches even for modest request streams)
+WORKER_SWEEP_BATCH = 4
+
+
 def _serve_once(spec: str, max_batch: int, max_wait_s: float,
                 imgs) -> dict:
     svc = EdgeDetectService(spec, max_batch_size=max_batch,
@@ -56,12 +91,122 @@ def _serve_once(spec: str, max_batch: int, max_wait_s: float,
         svc.close()
 
 
+def _serve_workers(spec: str, imgs, n_workers: int,
+                   device_latency_s: float, ref=None):
+    """One worker-sweep cell: stats, outputs, bit-identity vs ``ref``."""
+    svc = EdgeDetectService(spec, max_batch_size=WORKER_SWEEP_BATCH,
+                            n_workers=n_workers,
+                            device_latency_s=device_latency_s)
+    try:
+        svc.detect(imgs[:1])           # warmup: compile the bucket shape
+        svc.metrics.reset()
+        out = svc.detect(list(imgs))
+        identical = ref is None or (
+            len(out) == len(ref)
+            and all(np.array_equal(a, b) for a, b in zip(ref, out)))
+        return svc.stats(), out, identical
+    finally:
+        svc.close()
+
+
+def worker_sweep(spec: str, imgs, workers=WORKER_COUNTS) -> dict:
+    """Throughput vs worker count, host + emulated-device modes.
+
+    Returns the ``worker_sweep`` record for ``BENCH_serving.json`` and
+    prints the table. Every cell is verified bit-identical to the
+    single-worker host reference."""
+    print(f"\n== edge serving: throughput vs workers ({spec}) ==")
+    print(f"{'mode':>9s} {'workers':>7s} {'img/s':>8s} {'speedup':>7s} "
+          f"{'p50_ms':>7s} {'inflight_peak':>13s} {'identical':>9s}")
+    rows = []
+    base = {}
+    # host mode: the raw substrate; also yields the bit-identity reference
+    # and the emulated-device latency calibration (mean batch busy time)
+    ref = None
+    cal_s = 0.0
+    for w in workers:
+        s, out, identical = _serve_workers(spec, imgs, w, 0.0, ref=ref)
+        if ref is None:
+            ref = out
+            batches = sum(s["worker_batches"].values()) or 1
+            busy = sum(float(v)
+                       for v in s["worker_busy_seconds"].values())
+            # floor: the emulated stage must dominate sleep-granularity +
+            # GIL overhead, or the sleep measures the host, not the device
+            cal_s = max(busy / batches, 4e-3)
+        rows.append(("host", w, s, identical))
+    # emulated mode: device as slow as the measured host batch time
+    for w in workers:
+        s, _, identical = _serve_workers(spec, imgs, w, cal_s, ref=ref)
+        rows.append(("emulated", w, s, identical))
+    out_rows = []
+    for mode, w, s, identical in rows:
+        thrpt = s["throughput_rps"]
+        if w == workers[0]:
+            base[mode] = thrpt
+        speedup = thrpt / base[mode] if base[mode] > 0 else float("inf")
+        print(f"{mode:>9s} {w:>7d} {thrpt:>8.1f} {speedup:>6.2f}x "
+              f"{s['latency_p50_ms']:>7.2f} {s['inflight_peak']:>13d} "
+              f"{str(identical):>9s}")
+        out_rows.append({
+            "mode": mode, "workers": w,
+            "throughput_img_s": round(thrpt, 2),
+            "speedup_vs_1": round(speedup, 3),
+            "latency_p50_ms": round(s["latency_p50_ms"], 3),
+            "inflight_peak": s["inflight_peak"],
+            "worker_batches": s["worker_batches"],
+            "bit_identical_to_1worker": bool(identical),
+        })
+    return {
+        "spec": spec,
+        "max_batch": WORKER_SWEEP_BATCH,
+        "requests": len(imgs),
+        "emulated_device_latency_ms": round(cal_s * 1e3, 3),
+        "cpu_sync_dispatch": not jax.config._read(
+            "jax_cpu_enable_async_dispatch"),
+        "rows": out_rows,
+    }
+
+
+def _worker_sweep_subprocess(spec: str, n_requests: int,
+                             dry_run: bool) -> dict:
+    """Run :func:`worker_sweep` in a child process.
+
+    ``jax_cpu_enable_async_dispatch`` is read once, when the CPU client is
+    created — by the time the settings sweep has run it can no longer be
+    turned off in this process, so the sweep gets a fresh interpreter that
+    sets the flag first (see the module docstring for why it must be off).
+    """
+    cmd = [sys.executable, str(pathlib.Path(__file__).resolve()),
+           "--worker-sweep-only", spec, "--requests", str(n_requests)]
+    if dry_run:
+        cmd.append("--dry-run")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(_REPO_ROOT / "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    proc = subprocess.run(cmd, capture_output=True, text=True, env=env)
+    marker = "WORKER_SWEEP_JSON:"
+    payload = None
+    for line in proc.stdout.splitlines():
+        if line.startswith(marker):
+            payload = json.loads(line[len(marker):])
+        else:
+            print(line)
+    if proc.returncode != 0 or payload is None:
+        raise RuntimeError(
+            f"worker sweep subprocess failed (rc={proc.returncode}):\n"
+            f"{proc.stdout}\n{proc.stderr}")
+    return payload
+
+
 def run(substrates=None, dry_run: bool = False, n_requests: int = 32,
         json_path=DEFAULT_JSON, trace_path=None) -> list:
     specs = list(substrates) if substrates else list(DEFAULT_SUBSTRATES)
     settings = SETTINGS
+    worker_counts = WORKER_COUNTS
     if dry_run:
         specs, settings, n_requests = specs[:1], SETTINGS[1:2], 6
+        worker_counts = (1, 2)
     imgs = image_batch(n_requests, 32, 32, noise=1.5)
 
     tracer = Tracer() if trace_path else None
@@ -103,6 +248,21 @@ def run(substrates=None, dry_run: bool = False, n_requests: int = 32,
                     "compiled_calls": s["compiled_calls"],
                 })
 
+        # throughput-vs-worker-count table on the paper's served substrate
+        # (child process: needs jax_cpu_enable_async_dispatch=False)
+        sweep_spec = "approx_lut" if "approx_lut" in specs else specs[0]
+        sweep = _worker_sweep_subprocess(sweep_spec, n_requests, dry_run)
+        for row in sweep["rows"]:
+            rows.append((
+                f"serve_edge/{sweep_spec}/workers{row['workers']}"
+                f"/{row['mode']}",
+                1e6 / row["throughput_img_s"]
+                if row["throughput_img_s"] > 0 else float("inf"),
+                f"thrpt={row['throughput_img_s']:.1f}img/s "
+                f"speedup={row['speedup_vs_1']:.2f}x "
+                f"inflight_peak={row['inflight_peak']} "
+                f"identical={row['bit_identical_to_1worker']}"))
+
     if json_path:
         payload = {
             "bench": "edge_serving",
@@ -110,6 +270,7 @@ def run(substrates=None, dry_run: bool = False, n_requests: int = 32,
             "dry_run": bool(dry_run),
             "image_shape": [32, 32],
             "records": records,
+            "worker_sweep": sweep,
             # ambient-meter rollup over the whole sweep (includes warmup):
             # per-spec contraction counts, MACs, estimated energy in fJ
             "substrate_meter": meter.summary(),
@@ -134,7 +295,22 @@ def main() -> None:
                     help="output path for BENCH_serving.json ('' disables)")
     ap.add_argument("--trace", default=None, dest="trace_path",
                     help="write a Chrome/Perfetto trace of the serving spans")
+    ap.add_argument("--worker-sweep-only", default=None, metavar="SPEC",
+                    help="internal: run only the worker sweep for SPEC and "
+                         "print its JSON record (spawned as a subprocess so "
+                         "the CPU client is created with synchronous "
+                         "dispatch)")
     args = ap.parse_args()
+    if args.worker_sweep_only:
+        # must happen before the first computation creates the CPU client
+        jax.config.update("jax_cpu_enable_async_dispatch", False)
+        n = 6 if args.dry_run else args.requests
+        counts = (1, 2) if args.dry_run else WORKER_COUNTS
+        imgs = image_batch(n, 32, 32, noise=1.5)
+        record = worker_sweep(args.worker_sweep_only, list(imgs),
+                              workers=counts)
+        print("WORKER_SWEEP_JSON:" + json.dumps(record))
+        return
     substrates = args.substrates.split(",") if args.substrates else None
     rows = run(substrates=substrates, dry_run=args.dry_run,
                n_requests=args.requests, json_path=args.json_path or None,

@@ -11,8 +11,17 @@ else JSON) and ``--trace-out`` records the serving spans (queue wait, pad,
 compile, execute, crop) as a Chrome/Perfetto trace — CI smoke-validates
 both artifacts. See ``docs/observability.md``.
 
+``--workers N`` serves through N concurrent batcher workers (batch k+1
+dispatches while batch k runs — the per-worker ``serving_worker_*`` metric
+families and the ``serving_inflight_batches_peak`` gauge land in the same
+dump); outputs stay bit-identical at every worker count. ``--sharded``
+partitions each served contraction across the visible device mesh through
+``shard_map`` (run under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+on a CPU host).
+
 Run:  PYTHONPATH=src python examples/serve_edge.py [--smoke]
       [--substrate approx_lut:design_du2022] [--requests 24]
+      [--workers 4] [--sharded]
       [--metrics-out serve.json] [--trace-out trace.json]
 """
 import argparse
@@ -36,6 +45,12 @@ def main():
     ap.add_argument("--requests", type=int, default=24)
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--max-wait-ms", type=float, default=5.0)
+    ap.add_argument("--workers", type=int, default=1,
+                    help="batcher worker threads (overlap dispatch of "
+                         "batch k+1 with batch k's device compute)")
+    ap.add_argument("--sharded", action="store_true",
+                    help="partition served contractions across the visible "
+                         "device mesh via shard_map")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny fast run for CI (few small images)")
     ap.add_argument("--metrics-out", default=None, metavar="PATH",
@@ -57,14 +72,22 @@ def main():
     registry = MetricsRegistry()
     meter = ContractionMeter(registry)
     tracer = Tracer() if args.trace_out else None
+    partitioning = None
+    if args.sharded:
+        from repro.launch.mesh import (contraction_partitioning,
+                                       make_debug_mesh)
+        partitioning = contraction_partitioning(make_debug_mesh())
     with tracing_scope(tracer), telemetry_scope(meter):
         svc = EdgeDetectService(args.substrate,
                                 max_batch_size=args.max_batch,
                                 max_wait_s=args.max_wait_ms * 1e-3,
+                                n_workers=args.workers,
+                                partitioning=partitioning,
                                 metrics=ServingMetrics(registry=registry))
         print(f"serving {len(imgs)} mixed-shape images on "
               f"substrate={svc.spec!r} (max_batch={args.max_batch}, "
-              f"max_wait={args.max_wait_ms}ms)")
+              f"max_wait={args.max_wait_ms}ms, workers={args.workers}"
+              f"{', sharded' if args.sharded else ''})")
 
         outs = svc.detect(imgs)
         svc.close()

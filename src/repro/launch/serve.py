@@ -31,6 +31,9 @@ def main():
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--max-tokens", type=int, default=8)
+    ap.add_argument("--workers", type=int, default=1,
+                    help="concurrent decode loops (each with its own KV "
+                         "caches; requests split round-robin)")
     ap.add_argument("--metrics-out", default=None, metavar="PATH",
                     help="dump serving metrics (.prom/.txt → Prometheus "
                          "text, else JSON)")
@@ -54,7 +57,7 @@ def main():
     tracer = Tracer() if args.trace_out else None
     t0 = time.perf_counter()
     with tracing_scope(tracer):
-        out = engine.generate(reqs)
+        out = engine.generate(reqs, workers=args.workers)
     dt = time.perf_counter() - t0
     total_tokens = sum(len(r.output) for r in out)
     for i, r in enumerate(out):

@@ -8,11 +8,35 @@ Two primitives:
 * :class:`MicroBatcher` — dynamic micro-batching for one-shot requests: a
   thread-safe queue bucketed by an arbitrary key (shape buckets for vision),
   flushed when a bucket reaches ``max_batch_size`` or its oldest request has
-  waited ``max_wait_s``, drained by a background worker thread. The vision
-  :class:`~repro.serving.edge_service.EdgeDetectService` runs on this.
+  waited ``max_wait_s``, drained by ``n_workers`` background worker threads.
+  The vision :class:`~repro.serving.edge_service.EdgeDetectService` runs on
+  this.
 
-Both report into the same :class:`~repro.serving.metrics.ServingMetrics`
-schema, so LM and vision serving share one scheduling + telemetry core.
+Multi-worker pipeline: every worker loop pops flushable buckets from the
+shared queue under one condition variable, so with ``n_workers > 1`` batch
+``k+1`` is dispatched while batch ``k`` still runs. Work is split into two
+phases to make that overlap real for accelerator backends:
+
+* ``process_fn(bucket_key, payloads) -> raw`` — the *dispatch* phase. It may
+  return asynchronously-dispatched device values (e.g. the result of a
+  jitted call **without** ``block_until_ready``), so the worker releases the
+  device as soon as the computation is enqueued.
+* ``finalize_fn(bucket_key, raw) -> results`` — optional *delivery* phase:
+  blocks until the dispatched values are ready and materializes one result
+  per payload, in order. Without a ``finalize_fn``, ``process_fn`` must
+  return the final results itself.
+
+Fault isolation: a failing batch is retried payload-by-payload, so a poison
+payload fails only its own ticket (the error re-raises from
+``Ticket.result()``), healthy tickets from the same batch still get served,
+the worker loop stays alive, and each poisoned payload increments the
+``serving_worker_errors_total`` counter. ``process_fn`` must therefore be
+safe to re-invoke per payload (pure compute — true for every substrate
+contraction).
+
+Both primitives report into the same
+:class:`~repro.serving.metrics.ServingMetrics` schema, so LM and vision
+serving share one scheduling + telemetry core.
 """
 from __future__ import annotations
 
@@ -114,29 +138,47 @@ class Ticket:
 class MicroBatcher:
     """Dynamic micro-batcher: bucketed queue + size/timeout flush policy.
 
-    process_fn(bucket_key, payloads) -> results
-        Called on the worker thread with 1..max_batch_size payloads that share
-        a bucket key; must return one result per payload, in order.
+    process_fn(bucket_key, payloads) -> raw
+        Called on a worker thread with 1..max_batch_size payloads that share
+        a bucket key. With no ``finalize_fn`` it must return one result per
+        payload, in order; with one, it may return an opaque in-flight value
+        (non-blocking device dispatch) that ``finalize_fn`` materializes.
+    finalize_fn(bucket_key, raw) -> results
+        Optional delivery phase: blocks on the dispatched value and returns
+        one result per payload, in order. Runs on the same worker, but with
+        ``n_workers > 1`` another worker dispatches the next batch
+        concurrently — host/device overlap.
     bucket_fn(payload) -> hashable
         Bucket assignment (e.g. padded image shape); ``None`` puts everything
         in one bucket. Buckets never mix inside a batch.
     max_wait_s
         A non-full bucket flushes once its *oldest* request has waited this
         long; ``0`` flushes on every worker wakeup (latency-optimal).
+    n_workers
+        Worker threads draining the queue. Each popped batch is owned end to
+        end by one worker; pops are serialized under the queue lock, so
+        tickets are never lost, duplicated, or cross-wired regardless of
+        worker count.
     """
 
-    def __init__(self, process_fn: Callable[[Hashable, List[Any]], List[Any]],
+    def __init__(self, process_fn: Callable[[Hashable, List[Any]], Any],
                  *, max_batch_size: int = 8, max_wait_s: float = 2e-3,
                  bucket_fn: Optional[Callable[[Any], Hashable]] = None,
+                 finalize_fn: Optional[Callable[[Hashable, Any], List[Any]]] = None,
+                 n_workers: int = 1,
                  metrics: Optional[ServingMetrics] = None,
                  clock=time.perf_counter):
         if max_batch_size < 1:
             raise ValueError(f"max_batch_size must be >= 1, got {max_batch_size}")
         if max_wait_s < 0:
             raise ValueError(f"max_wait_s must be >= 0, got {max_wait_s}")
+        if n_workers < 1:
+            raise ValueError(f"n_workers must be >= 1, got {n_workers}")
         self.process_fn = process_fn
+        self.finalize_fn = finalize_fn
         self.max_batch_size = max_batch_size
         self.max_wait_s = max_wait_s
+        self.n_workers = n_workers
         self.bucket_fn = bucket_fn or (lambda _payload: None)
         self.metrics = metrics or ServingMetrics()
         self._clock = clock
@@ -144,7 +186,7 @@ class MicroBatcher:
         self._buckets: Dict[Hashable, collections.deque] = {}
         self._running = False
         self._stopped = False
-        self._thread: Optional[threading.Thread] = None
+        self._threads: List[threading.Thread] = []
 
     # -- lifecycle -----------------------------------------------------------
 
@@ -154,13 +196,16 @@ class MicroBatcher:
             if self._running:
                 return self
             self._running = True
-        self._thread = threading.Thread(target=self._worker, daemon=True,
-                                        name="micro-batcher")
-        self._thread.start()
+        self._threads = [
+            threading.Thread(target=self._worker, args=(i,), daemon=True,
+                             name=f"micro-batcher-{i}")
+            for i in range(self.n_workers)]
+        for t in self._threads:
+            t.start()
         return self
 
     def stop(self, drain: bool = True) -> None:
-        """Stop the worker; by default serve everything still queued first.
+        """Stop every worker; by default serve everything still queued first.
         Further submissions raise until the batcher is start()ed again."""
         with self._cv:
             self._stopped = True
@@ -168,9 +213,9 @@ class MicroBatcher:
             self._running = False
             self._cv.notify_all()
         if was_running:
-            assert self._thread is not None
-            self._thread.join()
-            self._thread = None
+            for t in self._threads:
+                t.join()
+            self._threads = []
         if drain:
             self._drain_inline()
 
@@ -247,27 +292,78 @@ class MicroBatcher:
 
     # -- execution -----------------------------------------------------------
 
-    def _serve(self, key: Hashable, batch: List[Ticket], reason: str) -> None:
-        self.metrics.record_batch(len(batch), reason, self.max_batch_size)
-        tracer = current_tracer()
-        if tracer is not None:
-            # retroactive span: the head ticket's time in queue. Only
-            # meaningful when the batcher runs on the tracer's clock
-            # (both default to time.perf_counter).
-            head = min(t.enqueued_at for t in batch)
-            tracer.event("batch.queue_wait", head, self._clock() - head,
-                         "serving", bucket=str(key), size=len(batch),
-                         reason=reason)
+    def _invoke(self, key: Hashable, payloads: List[Any], reason: str,
+                worker: str) -> List[Any]:
+        """One dispatch(+finalize) round for ``payloads``; raises on error.
+
+        The in-flight gauge covers dispatch-to-finalize, so its peak shows
+        how many batches genuinely overlapped on the device.
+        """
+        n = len(payloads)
+        self.metrics.record_inflight(+1)
         try:
             with trace_span("batch.process", "serving", bucket=str(key),
-                            size=len(batch), reason=reason):
-                results = self.process_fn(key, [t.payload for t in batch])
-            if len(results) != len(batch):
-                raise RuntimeError(
-                    f"process_fn returned {len(results)} results for "
-                    f"{len(batch)} payloads (bucket {key!r})")
-            errs = [None] * len(batch)
-        except BaseException as e:  # noqa: BLE001 - propagate to each ticket
+                            size=n, reason=reason, worker=worker):
+                raw = self.process_fn(key, payloads)
+            if self.finalize_fn is not None:
+                with trace_span("batch.finalize", "serving", bucket=str(key),
+                                size=n, worker=worker):
+                    results = self.finalize_fn(key, raw)
+            else:
+                results = raw
+        finally:
+            self.metrics.record_inflight(-1)
+        if len(results) != n:
+            raise RuntimeError(
+                f"process_fn returned {len(results)} results for "
+                f"{n} payloads (bucket {key!r})")
+        return list(results)
+
+    def _run_batch(self, key: Hashable, batch: List[Ticket], reason: str,
+                   worker: str):
+        """(results, errors) for the batch, isolating poison payloads.
+
+        On a batch failure the payloads are retried one by one, so only the
+        ticket(s) whose payload actually raises carry an error — the rest of
+        the batch is still served and the worker loop survives.
+        """
+        try:
+            results = self._invoke(key, [t.payload for t in batch], reason,
+                                   worker)
+            return results, [None] * len(batch)
+        except BaseException as batch_err:  # noqa: BLE001 - isolate below
+            if len(batch) == 1:
+                self.metrics.record_worker_error(worker)
+                return [None], [batch_err]
+            results, errs = [], []
+            for t in batch:
+                try:
+                    results.append(
+                        self._invoke(key, [t.payload], "isolate", worker)[0])
+                    errs.append(None)
+                except BaseException as e:  # noqa: BLE001 - per-ticket error
+                    self.metrics.record_worker_error(worker)
+                    results.append(None)
+                    errs.append(e)
+            return results, errs
+
+    def _serve(self, key: Hashable, batch: List[Ticket], reason: str,
+               worker: str = "drain") -> None:
+        t_busy = self._clock()
+        try:
+            self.metrics.record_batch(len(batch), reason, self.max_batch_size)
+            tracer = current_tracer()
+            if tracer is not None:
+                # retroactive span: the head ticket's time in queue. Only
+                # meaningful when the batcher runs on the tracer's clock
+                # (both default to time.perf_counter).
+                head = min(t.enqueued_at for t in batch)
+                tracer.event("batch.queue_wait", head, self._clock() - head,
+                             "serving", bucket=str(key), size=len(batch),
+                             reason=reason, worker=worker)
+            results, errs = self._run_batch(key, batch, reason, worker)
+        except BaseException as e:  # noqa: BLE001 - telemetry failure: still
+            # deliver something so no ticket blocks forever
             results = [None] * len(batch)
             errs = [e] * len(batch)
         now = self._clock()
@@ -277,8 +373,10 @@ class MicroBatcher:
             t.latency_s = now - t.enqueued_at
             self.metrics.record_done(t.latency_s, ok=e is None, depth=depth)
             t._event.set()
+        self.metrics.record_worker_batch(worker, self._clock() - t_busy)
 
-    def _worker(self) -> None:
+    def _worker(self, idx: int) -> None:
+        worker = str(idx)
         while True:
             with self._cv:
                 while True:
@@ -292,7 +390,15 @@ class MicroBatcher:
                     timeout = None if deadline is None \
                         else max(0.0, deadline - now)
                     self._cv.wait(timeout)
-            self._serve(*ready)
+            try:
+                self._serve(*ready, worker=worker)
+            except BaseException as e:  # noqa: BLE001 - keep the loop alive
+                # _serve already shields itself; this is the last-resort
+                # guard so a worker can never die holding unresolved tickets
+                for t in ready[1]:
+                    if not t.done():
+                        t._error = e
+                        t._event.set()
 
     def _drain_inline(self) -> None:
         """Serve every queued ticket on the calling thread (stop/flush)."""
@@ -305,5 +411,5 @@ class MicroBatcher:
 
     def flush(self) -> None:
         """Synchronously serve everything currently queued (testing/shutdown
-        aid; safe while the worker runs — pops are mutually exclusive)."""
+        aid; safe while workers run — pops are mutually exclusive)."""
         self._drain_inline()

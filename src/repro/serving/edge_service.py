@@ -24,10 +24,22 @@ service (= per substrate), so JAX's jit cache keys compiles on the
 cache. The batch dimension is padded up to ``max_batch_size`` so occupancy
 changes don't retrace, and the service tracks the shape keys it has seen
 (``compiled_shapes``, ``metrics.compiled_calls``) to make the compile count
-observable.
+observable. The seen-shape set is lock-guarded so concurrent workers
+hitting a new shape record exactly one compile (JAX's own jit cache already
+serializes the compilation itself).
+
+Multi-worker overlap: with ``n_workers > 1`` the service dispatches batch
+``k+1`` while batch ``k`` still runs on the device — ``_process`` returns
+the jitted call's result *without* materializing it (asynchronous JAX
+dispatch) and ``_finalize`` defers the implicit ``block_until_ready`` (the
+``np.asarray``) to result delivery. Every batch is still computed by the
+same compiled call on the same padded operands, so served maps stay
+bit-identical to the single-worker path on every substrate.
 """
 from __future__ import annotations
 
+import threading
+import time
 from typing import Iterable, List, Optional, Sequence, Tuple
 
 import jax
@@ -55,6 +67,19 @@ class EdgeDetectService:
                         bucket key (1 = exact-shape buckets, no padding).
     pad_batches:        pad the batch dim to max_batch_size before the
                         compiled call, so occupancy changes don't retrace.
+    n_workers:          worker threads draining the bucketed queue; >1
+                        overlaps host-side micro-batching with device
+                        compute (results stay bit-identical).
+    device_latency_s:   emulated extra device latency: a ``pure_callback``
+                        sleep stage appended *inside* the compiled call, so
+                        the batch occupies the (emulated) device for this
+                        long after the real contraction — the full async
+                        dispatch/finalize path is exercised while values
+                        pass through unchanged. Lets a host-only runner
+                        measure worker/overlap scaling as if the device were
+                        this slow (benchmarks) and widens race windows
+                        (stress tests). ``0`` (production default) adds no
+                        stage.
     partitioning:       optional :class:`repro.nn.substrate.Partitioning` —
                         the served contraction lowers through shard_map
                         (data-parallel M / reduce-scattered K). Bit-identity
@@ -65,24 +90,29 @@ class EdgeDetectService:
     def __init__(self, substrate: "str | sub.ProductSubstrate" = "approx_bitexact",
                  *, max_batch_size: int = 8, max_wait_s: float = 2e-3,
                  bucket_granularity: int = 16, pad_batches: bool = True,
+                 n_workers: int = 1, device_latency_s: float = 0.0,
                  partitioning: Optional[sub.Partitioning] = None,
                  metrics: Optional[ServingMetrics] = None, start: bool = True):
         if bucket_granularity < 1:
             raise ValueError(
                 f"bucket_granularity must be >= 1, got {bucket_granularity}")
+        if device_latency_s < 0:
+            raise ValueError(
+                f"device_latency_s must be >= 0, got {device_latency_s}")
         self.substrate = sub.as_substrate(substrate)
         self.spec = self.substrate.meta.spec
         self.bucket_granularity = bucket_granularity
         self.pad_batches = pad_batches
+        self.device_latency_s = device_latency_s
         self.partitioning = partitioning
         self.metrics = metrics or ServingMetrics()
         self._compiled_keys = set()  # (batch, H, W) shapes traced so far
-        self._jit_fn = jax.jit(
-            lambda imgs: conv.edge_detect_batched(
-                imgs, self.substrate, partitioning=self.partitioning))
+        self._compiled_lock = threading.Lock()  # workers race on new shapes
+        self._jit_fn = jax.jit(self._compute)
         self.batcher = MicroBatcher(
             self._process, max_batch_size=max_batch_size,
             max_wait_s=max_wait_s, bucket_fn=self._bucket,
+            finalize_fn=self._finalize, n_workers=n_workers,
             metrics=self.metrics)
         if start:
             self.batcher.start()
@@ -101,13 +131,34 @@ class EdgeDetectService:
 
     # -- request path --------------------------------------------------------
 
+    def _compute(self, batch):
+        """Traced body of the compiled call: the edge-detect contraction,
+        plus (when ``device_latency_s > 0``) an identity ``pure_callback``
+        stage that holds the result on the emulated device for that long.
+        The callback returns its input untouched, so emulation never
+        perturbs served values — only their timing."""
+        out = conv.edge_detect_batched(
+            batch, self.substrate, partitioning=self.partitioning)
+        if self.device_latency_s > 0:
+            out = jax.pure_callback(
+                self._emulate_device,
+                jax.ShapeDtypeStruct(out.shape, out.dtype), out)
+        return out
+
+    def _emulate_device(self, out):
+        time.sleep(self.device_latency_s)
+        return out
+
     def _bucket(self, img: np.ndarray) -> Tuple[int, int]:
         h, w = img.shape
         g = self.bucket_granularity
         return (_ceil_to(h, g), _ceil_to(w, g))
 
-    def _process(self, bucket: Tuple[int, int],
-                 imgs: List[np.ndarray]) -> List[np.ndarray]:
+    def _process(self, bucket: Tuple[int, int], imgs: List[np.ndarray]):
+        """Dispatch phase: pad to the bucket shape and enqueue the compiled
+        call *without* blocking on it — the returned device array is
+        materialized by :meth:`_finalize`, so with several workers the next
+        batch's dispatch overlaps this batch's device compute."""
         hh, ww = bucket
         b = len(imgs)
         bp = self.batcher.max_batch_size if self.pad_batches else b
@@ -117,21 +168,31 @@ class EdgeDetectService:
                 h, w = im.shape
                 batch[i, :h, :w] = im
         shape = "x".join(map(str, batch.shape))
-        if batch.shape not in self._compiled_keys:
-            self._compiled_keys.add(batch.shape)
+        with self._compiled_lock:
+            first = batch.shape not in self._compiled_keys
+            if first:
+                self._compiled_keys.add(batch.shape)
+        if first:
             self.metrics.record_compile()
             # first call for this shape: the jitted call traces + compiles
-            # before executing, so this span is compile-dominated
+            # before dispatching, so this span is compile-dominated
             with trace_span("edge.compile", "serving", shape=shape,
                             spec=self.spec):
-                out = np.asarray(self._jit_fn(batch))
+                out = self._jit_fn(batch)
         else:
             with trace_span("edge.execute", "serving", shape=shape,
                             spec=self.spec):
-                out = np.asarray(self._jit_fn(batch))
-        with trace_span("edge.crop", "serving", size=b):
-            return [out[i, :im.shape[0], :im.shape[1]]
-                    for i, im in enumerate(imgs)]
+                out = self._jit_fn(batch)
+        return out, [im.shape for im in imgs]
+
+    def _finalize(self, bucket: Tuple[int, int], raw) -> List[np.ndarray]:
+        """Delivery phase: block until the dispatched batch is ready, then
+        crop each map back to its request shape."""
+        out_dev, shapes = raw
+        with trace_span("edge.wait", "serving", size=len(shapes)):
+            out = np.asarray(out_dev)      # implicit block_until_ready
+        with trace_span("edge.crop", "serving", size=len(shapes)):
+            return [out[i, :h, :w] for i, (h, w) in enumerate(shapes)]
 
     @staticmethod
     def _check_image(img) -> np.ndarray:
@@ -164,9 +225,14 @@ class EdgeDetectService:
     # -- introspection -------------------------------------------------------
 
     @property
+    def n_workers(self) -> int:
+        return self.batcher.n_workers
+
+    @property
     def compiled_shapes(self) -> Sequence[Tuple[int, int, int]]:
         """(batch, H, W) keys the service has compiled calls for."""
-        return tuple(sorted(self._compiled_keys))
+        with self._compiled_lock:
+            return tuple(sorted(self._compiled_keys))
 
     def stats(self) -> dict:
         return self.metrics.snapshot()

@@ -9,6 +9,18 @@ queue/slot-refill bookkeeping is the shared
 vision micro-batcher builds on), and per-step occupancy plus per-request
 latency land in a :class:`~repro.serving.metrics.ServingMetrics`.
 
+``generate(requests, workers=N)`` runs N concurrent decode loops, each with
+its *own* KV caches, slot pool, and sampling RNG, all sharing the one
+compiled ``decode_step`` (JAX compiled calls are thread-safe) and the one
+metrics instance (``serving_worker_*`` families labeled ``lm-0..N-1``).
+Requests split round-robin across loops. Greedy decodes of first-wave
+requests (seated into fresh cache lanes) are bit-identical at every worker
+count; a request seated into a *refilled* slot attends over the previous
+occupant's cache prefix, so its tokens depend on scheduling order — a
+pre-existing property of the shared-``cache_len`` engine that holds even
+at ``workers=1`` (reordering requests changes refilled-slot outputs the
+same way).
+
 For the large-scale path, the *dry-run* lowers the dedicated ``prefill``
 graph (chunked attention, full-sequence); this engine is the functional
 small-scale server used by the examples and tests.
@@ -20,6 +32,7 @@ bundle + params without touching the model registry.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Any, Dict, List, Optional
 
@@ -81,24 +94,30 @@ class ServingEngine:
         self.params = params
         self.batch = batch_size
         self.max_len = max_len
+        self.seed = seed
         self.rng = np.random.default_rng(seed)
         self.metrics = metrics if metrics is not None else ServingMetrics()
         self._decode = jax.jit(bundle.decode_step)
         self._reset_state()
 
-    def _reset_state(self):
-        self.state = self.bundle.init_decode_state(self.batch, self.max_len)
+    def _init_state(self):
+        state = self.bundle.init_decode_state(self.batch, self.max_len)
         if self.cfg.family == "encdec":
-            self.state["enc_out"] = jnp.zeros(
+            state["enc_out"] = jnp.zeros(
                 (self.batch, self.cfg.n_frames, self.cfg.d_model), self.cfg.dtype)
+        return state
 
-    def _step(self, tokens: np.ndarray, cache_len: int):
+    def _reset_state(self):
+        self.state = self._init_state()
+
+    def _step(self, state, tokens: np.ndarray, cache_len: int):
         batch = {"token": jnp.asarray(tokens.reshape(self.batch, 1), jnp.int32),
                  "cache_len": jnp.asarray(cache_len, jnp.int32)}
-        logits, self.state = self._decode(self.params, self.state, batch)
-        return np.asarray(logits[:, 0, :], np.float32)
+        logits, state = self._decode(self.params, state, batch)
+        return np.asarray(logits[:, 0, :], np.float32), state
 
-    def _sample(self, logits: np.ndarray, temps: np.ndarray) -> np.ndarray:
+    def _sample(self, logits: np.ndarray, temps: np.ndarray,
+                rng: np.random.Generator) -> np.ndarray:
         out = np.empty(self.batch, np.int64)
         for i in range(self.batch):
             if temps[i] <= 0:
@@ -108,15 +127,50 @@ class ServingEngine:
                 z -= z.max()
                 p = np.exp(z)
                 p /= p.sum()
-                out[i] = self.rng.choice(len(p), p=p)
+                out[i] = rng.choice(len(p), p=p)
         return out
 
-    def generate(self, requests: List[Request]) -> List[Request]:
-        """Serve a list of requests with continuous slot refill."""
-        with trace_span("serve.generate", "serving", requests=len(requests)):
-            return self._generate(requests)
+    def generate(self, requests: List[Request],
+                 workers: int = 1) -> List[Request]:
+        """Serve a list of requests with continuous slot refill.
 
-    def _generate(self, requests: List[Request]) -> List[Request]:
+        ``workers > 1`` runs that many concurrent decode loops, each with
+        its own KV caches and ``batch_size`` slots (requests split
+        round-robin). Greedy outputs of first-wave requests are identical
+        at any worker count (see the module docstring for the refilled-slot
+        caveat).
+        """
+        if workers < 1:
+            raise ValueError(f"workers must be >= 1, got {workers}")
+        workers = min(workers, max(1, len(requests)))
+        with trace_span("serve.generate", "serving", requests=len(requests),
+                        workers=workers):
+            if workers == 1:
+                self._generate(requests, self.rng, worker="lm-0")
+                return requests
+            chunks = [requests[i::workers] for i in range(workers)]
+            errors: List[BaseException] = []
+
+            def run(i: int, chunk: List[Request]) -> None:
+                try:
+                    self._generate(chunk, np.random.default_rng(
+                        (self.seed, i)), worker=f"lm-{i}")
+                except BaseException as e:  # noqa: BLE001 - re-raised below
+                    errors.append(e)
+
+            threads = [threading.Thread(target=run, args=(i, c),
+                                        name=f"lm-decode-{i}")
+                       for i, c in enumerate(chunks)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            if errors:
+                raise errors[0]
+            return requests
+
+    def _generate(self, requests: List[Request], rng: np.random.Generator,
+                  worker: str = "lm-0") -> List[Request]:
         sched = SlotScheduler(self.batch)
         t_start = {}
         for r in requests:
@@ -128,7 +182,7 @@ class ServingEngine:
         # is handled by feeding pad tokens for idle slots (logits ignored).
         cache_len = 0
         served: set = set()                           # id(r) with metrics
-        self._reset_state()
+        state = self._init_state()                    # this loop's KV caches
         cursor = np.zeros(self.batch, np.int64)       # prompt cursor
         while sched.busy and cache_len < self.max_len - 1:
             for i, r in sched.refill():
@@ -147,11 +201,15 @@ class ServingEngine:
                 elif r.output:
                     tokens[i] = r.output[-1]
             self.metrics.record_batch(sched.occupancy, "decode", self.batch)
+            t_step = time.perf_counter()
             with trace_span("serve.decode_step", "serving",
-                            cache_len=cache_len, occupancy=sched.occupancy):
-                logits = self._step(tokens, cache_len)
+                            cache_len=cache_len, occupancy=sched.occupancy,
+                            worker=worker):
+                logits, state = self._step(state, tokens, cache_len)
+            self.metrics.record_worker_batch(
+                worker, time.perf_counter() - t_step)
             temps = np.array([r.temperature if r else 0.0 for r in sched.slots])
-            nxt = self._sample(logits, temps)
+            nxt = self._sample(logits, temps, rng)
             for i, r in sched.occupied():
                 if r.done:
                     continue

@@ -80,6 +80,23 @@ class ServingMetrics:
         self._latency = r.histogram("serving_request_latency_seconds",
                                     "request latency (enqueue to done)",
                                     buckets=_LATENCY_BUCKETS)
+        self._worker_batches = r.counter("serving_worker_batches_total",
+                                         "batches served, by worker",
+                                         ("worker",))
+        self._worker_busy = r.counter("serving_worker_busy_seconds_total",
+                                      "seconds spent serving batches, by "
+                                      "worker (occupancy = busy / wall)",
+                                      ("worker",))
+        self._worker_errors = r.counter("serving_worker_errors_total",
+                                        "per-payload failures isolated on a "
+                                        "worker, by worker",
+                                        ("worker",))
+        self._inflight = r.gauge("serving_inflight_batches",
+                                 "batches dispatched but not yet finalized "
+                                 "(device-utilization proxy)")
+        self._inflight_peak = r.gauge("serving_inflight_batches_peak",
+                                      "high-water mark of concurrently "
+                                      "in-flight batches")
         self.reset()
 
     def reset(self) -> None:
@@ -95,7 +112,8 @@ class ServingMetrics:
         for fam in (self._enqueued, self._served, self._failed, self._batches,
                     self._compiles, self._depth, self._depth_peak,
                     self._batch_sizes, self._slots_used, self._slots_total,
-                    self._latency):
+                    self._latency, self._worker_batches, self._worker_busy,
+                    self._worker_errors, self._inflight, self._inflight_peak):
             fam.reset()
 
     # -- recording -----------------------------------------------------------
@@ -129,6 +147,21 @@ class ServingMetrics:
 
     def record_compile(self) -> None:
         self._compiles.inc()
+
+    def record_worker_batch(self, worker: str, busy_s: float) -> None:
+        """One batch served end-to-end by ``worker`` in ``busy_s`` seconds."""
+        self._worker_batches.labels(worker=str(worker)).inc()
+        self._worker_busy.labels(worker=str(worker)).inc(max(0.0, busy_s))
+
+    def record_worker_error(self, worker: str) -> None:
+        """One payload failed (and was isolated) on ``worker``."""
+        self._worker_errors.labels(worker=str(worker)).inc()
+
+    def record_inflight(self, delta: int) -> None:
+        """Batch entered (+1) / left (-1) the dispatched-not-finalized window."""
+        self._inflight.inc(delta)
+        if delta > 0:
+            self._inflight_peak.set_max(self._inflight.value())
 
     # -- historical attribute surface (read-only, registry-backed) -----------
 
@@ -170,6 +203,32 @@ class ServingMetrics:
         return {int(labels["size"]): int(v)
                 for labels, v in self._batch_sizes.samples()}
 
+    @property
+    def worker_batches(self) -> Dict[str, int]:
+        """{worker: batches served} over every worker that served one."""
+        return {labels["worker"]: int(v)
+                for labels, v in self._worker_batches.samples()}
+
+    @property
+    def worker_busy_seconds(self) -> Dict[str, float]:
+        return {labels["worker"]: float(v)
+                for labels, v in self._worker_busy.samples()}
+
+    @property
+    def worker_errors(self) -> int:
+        """Total payload failures isolated across all workers."""
+        return sum(int(v) for _, v in self._worker_errors.samples())
+
+    @property
+    def inflight_batches(self) -> int:
+        return int(self._inflight.value())
+
+    @property
+    def inflight_peak(self) -> int:
+        """Max batches simultaneously dispatched-not-finalized (>1 proves
+        batch k+1 was dispatched while batch k still ran)."""
+        return int(self._inflight_peak.value())
+
     # -- derived views -------------------------------------------------------
 
     def latency_percentile(self, p: float) -> float:
@@ -208,6 +267,12 @@ class ServingMetrics:
             "queue_depth": self.queue_depth,
             "queue_depth_peak": self.queue_depth_peak,
             "occupancy_hist": dict(sorted(self.occupancy_hist.items())),
+            "worker_batches": dict(sorted(self.worker_batches.items())),
+            "worker_busy_seconds": {
+                k: round(v, 6)
+                for k, v in sorted(self.worker_busy_seconds.items())},
+            "worker_errors": self.worker_errors,
+            "inflight_peak": self.inflight_peak,
         }
         base["mean_occupancy"] = self.mean_occupancy()
         base["throughput_rps"] = self.throughput()
@@ -222,12 +287,16 @@ class ServingMetrics:
             or "-"
         reasons = " ".join(f"{k}:{v}" for k, v in s["batches_by_reason"].items()) \
             or "-"
+        workers = " ".join(f"{k}:{v}"
+                           for k, v in s["worker_batches"].items()) or "-"
         return "\n".join([
             f"requests   in={s['requests_enqueued']} "
             f"served={s['requests_served']} failed={s['requests_failed']}",
             f"batches    n={s['batches_flushed']} ({reasons}) "
             f"occupancy={s['mean_occupancy']:.2f} [{occ}]",
             f"queue      depth={s['queue_depth']} peak={s['queue_depth_peak']}",
+            f"workers    [{workers}] errors={s['worker_errors']} "
+            f"inflight_peak={s['inflight_peak']}",
             f"latency    p50={s['latency_p50_ms']:.2f}ms "
             f"p95={s['latency_p95_ms']:.2f}ms p99={s['latency_p99_ms']:.2f}ms",
             f"throughput {s['throughput_rps']:.1f} req/s "

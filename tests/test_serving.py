@@ -53,6 +53,32 @@ def _echo_batcher(calls, **kw):
     return MicroBatcher(process, **kw)
 
 
+class FakeClock:
+    """Injectable deterministic clock for timeout-policy tests.
+
+    ``advance`` moves virtual time and wakes the batcher's workers (they
+    block in ``cv.wait`` with a timeout computed from this clock), so
+    timeout flushes fire exactly when the test says time has passed — no
+    wall-clock sleeps, no flakes on slow machines."""
+
+    def __init__(self):
+        self.t = 0.0
+        self._batcher = None
+
+    def attach(self, batcher: MicroBatcher) -> MicroBatcher:
+        self._batcher = batcher
+        return batcher
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+        if self._batcher is not None:
+            with self._batcher._cv:
+                self._batcher._cv.notify_all()
+
+
 def test_flush_on_size_before_timeout():
     """A full bucket flushes immediately even with a huge max_wait."""
     calls = []
@@ -65,16 +91,25 @@ def test_flush_on_size_before_timeout():
 
 
 def test_flush_on_timeout_partial_batch():
-    """A partial bucket flushes once its oldest request expires."""
+    """A partial bucket flushes once its oldest request expires.
+
+    Virtual time (FakeClock) — both submissions land at t=0, nothing may
+    flush until the clock passes max_wait_s, then exactly one timeout
+    batch fires. Deterministic on any machine."""
     calls = []
-    with _echo_batcher(calls, max_batch_size=8, max_wait_s=0.02) as b:
+    clock = FakeClock()
+    with clock.attach(_echo_batcher(calls, max_batch_size=8, max_wait_s=1.0,
+                                    clock=clock)) as b:
         tickets = b.submit_many([1, 2])
+        clock.advance(0.5)                       # before the deadline
+        assert not any(t.done() for t in tickets)
+        clock.advance(0.6)                       # past max_wait_s
         assert [t.result(timeout=10.0) for t in tickets] == [10, 20]
     assert calls == [(None, [1, 2])]
     assert b.metrics.batches_by_reason == {"timeout": 1}
     assert b.metrics.occupancy_hist == {2: 1}
-    # both waited out most of max_wait_s (second enqueued µs after the first)
-    assert all(t.latency_s >= 0.015 for t in tickets)
+    # latencies are measured on the injected clock: exact, not approximate
+    assert all(t.latency_s == pytest.approx(1.1) for t in tickets)
 
 
 def test_bucket_isolation_and_sync_flush():
@@ -251,16 +286,19 @@ def test_edge_service_shape_bucket_isolation():
     assert set(svc.compiled_shapes) == {(8, 8, 8), (8, 16, 16)}
 
 
-def test_edge_service_flush_on_size_vs_timeout():
-    svc = EdgeDetectService("exact", max_batch_size=2, max_wait_s=0.02)
+def test_edge_service_flush_on_size_vs_drain():
+    """5 images at max_batch 2: two full batches flush on size, the
+    leftover is drained at close. max_wait is effectively infinite so the
+    reason split never depends on wall-clock timing."""
+    svc = EdgeDetectService("exact", max_batch_size=2, max_wait_s=60.0)
     try:
-        outs = svc.detect(image_batch(5, 16, 16))   # 2+2 size, 1 timeout
+        tickets = [svc.submit(im) for im in image_batch(5, 16, 16)]
+        full = [t.result(timeout=30.0) for t in tickets[:4]]  # size flushes
+        assert all(o.shape == (16, 16) for o in full)
     finally:
-        svc.close()
-    assert len(outs) == 5
-    reasons = svc.metrics.batches_by_reason
-    assert reasons.get("size", 0) == 2
-    assert reasons.get("timeout", 0) + reasons.get("drain", 0) == 1
+        svc.close()                                # drains the leftover
+    assert tickets[4].result(timeout=0).shape == (16, 16)
+    assert svc.metrics.batches_by_reason == {"size": 2, "drain": 1}
 
 
 def test_edge_service_compiled_call_cache_stable():

@@ -1,0 +1,131 @@
+"""Hypothesis stateful property tests for the serving scheduling core.
+
+Skip-guarded: ``hypothesis`` is an optional ``[test]`` extra — when it is
+not installed this whole module skips (the deterministic equivalents live
+in ``test_serving_stress.py``).
+
+Two machines drive randomized operation interleavings:
+
+* :class:`MicroBatcherMachine` — submit/flush/stop-restart against a live
+  2-worker batcher. Invariants at teardown: *ticket completeness* (every
+  ticket served exactly once, carrying its own nonce — no loss, no
+  duplication, no cross-wiring) and *per-bucket shape homogeneity* (bucket
+  keys are ragged image shapes; a batch never mixes shapes and never
+  overfills).
+* :class:`SlotSchedulerMachine` — submit/refill/release against the
+  fixed-slot scheduler. Invariants on every step: occupancy bounded by the
+  slot count, no request seated twice, FIFO seating order preserved.
+"""
+import threading
+
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (optional [test] extra)")
+
+from hypothesis import settings, strategies as st  # noqa: E402
+from hypothesis.stateful import (RuleBasedStateMachine, initialize,  # noqa: E402
+                                 invariant, rule)
+
+from repro.serving import MicroBatcher, SlotScheduler  # noqa: E402
+
+SHAPES = ((8, 8), (13, 9), (16, 16))
+
+
+class MicroBatcherMachine(RuleBasedStateMachine):
+    @initialize()
+    def setup(self):
+        self.lock = threading.Lock()
+        self.batches = []             # (bucket_key, [nonce, ...]) per batch
+        self.next_nonce = 0
+        self.tickets = []
+
+        def process(key, payloads):
+            for shape, _nonce in payloads:
+                assert shape == key, "batch mixed bucket shapes"
+            with self.lock:
+                self.batches.append((key, [n for _, n in payloads]))
+            return [(key, n) for _, n in payloads]
+
+        # max_wait is effectively infinite: flushes happen on size, on
+        # explicit flush(), or at drain — the machine owns all timing
+        self.mb = MicroBatcher(process, max_batch_size=3, max_wait_s=60.0,
+                               bucket_fn=lambda p: p[0],
+                               n_workers=2).start()
+
+    @rule(shape=st.sampled_from(SHAPES))
+    def submit(self, shape):
+        nonce = self.next_nonce
+        self.next_nonce += 1
+        self.tickets.append((shape, nonce, self.mb.submit((shape, nonce))))
+
+    @rule()
+    def flush(self):
+        self.mb.flush()
+
+    @rule()
+    def stop_and_restart(self):
+        self.mb.stop(drain=True)      # drains everything queued
+        self.mb.start()
+
+    def teardown(self):
+        self.mb.stop(drain=True)
+        # ticket completeness + wiring: every ticket gets its own nonce
+        for shape, nonce, t in self.tickets:
+            assert t.result(timeout=30.0) == (shape, nonce)
+        # exactly-once processing across all batches
+        served = sorted(n for _, nonces in self.batches for n in nonces)
+        assert served == list(range(self.next_nonce))
+        # shape homogeneity + size bound for every flushed batch
+        for key, nonces in self.batches:
+            assert key in SHAPES and 1 <= len(nonces) <= 3
+
+
+MicroBatcherMachine.TestCase.settings = settings(
+    max_examples=25, stateful_step_count=30, deadline=None)
+TestMicroBatcherStateful = MicroBatcherMachine.TestCase
+
+
+class SlotSchedulerMachine(RuleBasedStateMachine):
+    @initialize(n_slots=st.integers(min_value=1, max_value=4))
+    def setup(self, n_slots):
+        self.s = SlotScheduler(n_slots)
+        self.submitted = 0
+        self.seated_order = []
+
+    @rule()
+    def submit(self):
+        self.s.submit(self.submitted)
+        self.submitted += 1
+
+    @rule()
+    def refill(self):
+        for _idx, item in self.s.refill():
+            self.seated_order.append(item)
+
+    @rule(data=st.data())
+    def release_one(self, data):
+        occupied = self.s.occupied()
+        if occupied:
+            idx, _item = data.draw(st.sampled_from(occupied))
+            self.s.release(idx)
+
+    @invariant()
+    def occupancy_bounded(self):
+        assert 0 <= self.s.occupancy <= self.s.n_slots
+
+    @invariant()
+    def seating_is_fifo_exactly_once(self):
+        # requests are seated at most once, in submission order
+        assert self.seated_order == sorted(set(self.seated_order))
+
+    @invariant()
+    def conservation(self):
+        # everything submitted is queued, seated at some point, or gone
+        # through a slot; nothing is duplicated between queue and history
+        assert len(self.seated_order) + len(self.s.queue) == self.submitted
+
+
+SlotSchedulerMachine.TestCase.settings = settings(
+    max_examples=50, stateful_step_count=30, deadline=None)
+TestSlotSchedulerStateful = SlotSchedulerMachine.TestCase

@@ -1,0 +1,263 @@
+"""Concurrency stress tests for the multi-worker serving layer.
+
+What "correct under concurrency" means for the MicroBatcher, checked
+across worker counts 1/2/4 with multiple producer threads:
+
+* **no lost tickets** — every submitted request is served (or carries an
+  error); nothing blocks forever;
+* **no duplicated work** — each payload is processed exactly once across
+  all batches (isolation retries excepted, and only on failures);
+* **no cross-wiring** — a ticket's result embeds the nonce of *its own*
+  payload, never a neighbour's;
+* **batch homogeneity** — payloads inside one batch always share the
+  bucket key;
+* **accounting closure** — flush-reason counters sum to the number of
+  batches actually processed, and per-worker batch counters sum to the
+  same total;
+* **clean shutdown** — ``stop(drain=True)`` with a full queue serves
+  everything and leaks no worker threads (``threading.enumerate()``);
+* **fault isolation** — a poison payload fails only its own ticket, the
+  batch's healthy tickets are still served, the worker loop survives to
+  serve later submissions, and ``serving_worker_errors_total`` counts it.
+
+Every wait uses events/``Ticket.result(timeout=...)`` — no sleeps, no
+wall-clock assertions. A hypothesis stateful machine (skip-guarded: the
+dependency is optional) drives random submit/flush/stop interleavings
+against the same invariants.
+"""
+import random
+import threading
+
+import numpy as np
+import pytest
+
+from repro.data import mixed_shape_batch
+from repro.nn import conv
+from repro.serving import EdgeDetectService, MicroBatcher
+
+WORKER_COUNTS = (1, 2, 4)
+
+
+def _batcher_threads():
+    return [t for t in threading.enumerate()
+            if t.name.startswith("micro-batcher")]
+
+
+# ---------------------------------------------------------------------------
+# producer threads x buckets x workers: completeness, wiring, accounting
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_workers", WORKER_COUNTS)
+def test_stress_no_lost_duplicated_or_crosswired_tickets(n_workers):
+    n_producers, per_producer = 4, 40
+    buckets = ("a", "b", "c")
+    lock = threading.Lock()
+    batches = []                      # (key, [nonce, ...]) per process call
+
+    def process(key, payloads):
+        for bucket, _nonce in payloads:
+            assert bucket == key, "bucket mixed into foreign batch"
+        with lock:
+            batches.append((key, [n for _, n in payloads]))
+        return [("served", key, nonce) for _, nonce in payloads]
+
+    before = _batcher_threads()
+    b = MicroBatcher(process, max_batch_size=4, max_wait_s=1e-4,
+                     bucket_fn=lambda p: p[0], n_workers=n_workers).start()
+    tickets = {}
+    t_lock = threading.Lock()
+    barrier = threading.Barrier(n_producers)
+
+    def produce(pid):
+        rng = random.Random(pid)
+        barrier.wait()                # maximum contention at the start
+        for i in range(per_producer):
+            nonce = (pid, i)
+            t = b.submit((rng.choice(buckets), nonce))
+            with t_lock:
+                tickets[nonce] = t
+
+    producers = [threading.Thread(target=produce, args=(pid,))
+                 for pid in range(n_producers)]
+    for t in producers:
+        t.start()
+    for t in producers:
+        t.join()
+
+    # completeness + wiring: each ticket returns its own nonce
+    for nonce, t in tickets.items():
+        tag, key, got = t.result(timeout=30.0)
+        assert tag == "served" and got == nonce, \
+            f"ticket {nonce} got result for {got}"
+    b.stop()
+
+    total = n_producers * per_producer
+    assert len(tickets) == total
+    # no duplicated/lost work: every nonce processed exactly once
+    served = sorted(n for _, nonces in batches for n in nonces)
+    assert served == sorted(tickets)
+    # accounting closure: reasons and per-worker counters both sum to the
+    # number of batches actually processed
+    m = b.metrics
+    assert sum(m.batches_by_reason.values()) == len(batches)
+    assert sum(m.worker_batches.values()) == len(batches)
+    assert m.requests_served == total and m.requests_failed == 0
+    assert m.worker_errors == 0
+    assert sum(m.occupancy_hist[k] * k for k in m.occupancy_hist) == total
+    assert _batcher_threads() == before, "leaked worker threads"
+
+
+@pytest.mark.parametrize("n_workers", WORKER_COUNTS)
+def test_stress_clean_shutdown_with_full_queue(n_workers):
+    """stop(drain=True) while the queue is still loaded: the in-flight
+    batches finish, the rest is drained inline, nothing is lost and no
+    worker thread survives. The 25th ticket can only be served by the
+    drain path (max_wait is effectively infinite), proving shutdown
+    flushes partial buckets."""
+    release = threading.Event()
+    started = threading.Event()
+
+    def process(key, payloads):
+        started.set()
+        assert release.wait(30.0), "test forgot to release the workers"
+        return [p for p in payloads]
+
+    before = _batcher_threads()
+    b = MicroBatcher(process, max_batch_size=2, max_wait_s=60.0,
+                     n_workers=n_workers).start()
+    tickets = b.submit_many(range(25))
+    assert started.wait(30.0)         # workers are now blocked mid-batch
+    assert b.depth > 0, "queue should still be loaded at shutdown"
+    release.set()
+    b.stop(drain=True)
+    assert [t.result(timeout=0) for t in tickets] == list(range(25))
+    m = b.metrics
+    assert m.requests_served == 25
+    assert not b.running
+    assert m.batches_by_reason.get("drain", 0) >= 1   # the odd one out
+    assert sum(m.batches_by_reason.values()) == \
+        sum(m.worker_batches.values())
+    assert _batcher_threads() == before, "leaked worker threads"
+
+
+def test_rapid_start_stop_cycles_never_lose_tickets():
+    """Repeated start/submit/stop cycles: every submission is served, and
+    a post-stop submission fails fast instead of blocking forever."""
+    def process(key, payloads):
+        return [p for p in payloads]
+
+    b = MicroBatcher(process, max_batch_size=4, max_wait_s=0.0, n_workers=2)
+    for cycle in range(10):
+        b.start()
+        ts = b.submit_many(range(8))
+        b.stop(drain=True)
+        assert [t.result(timeout=10.0) for t in ts] == list(range(8))
+        with pytest.raises(RuntimeError, match="stopped"):
+            b.submit(99)
+
+
+# ---------------------------------------------------------------------------
+# fault isolation: poison payloads
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_workers", (1, 4))
+def test_poison_payload_fails_only_its_ticket(n_workers):
+    def process(key, payloads):
+        if any(p == "poison" for p in payloads):
+            raise ValueError("poisoned batch")
+        return [str(p).upper() for p in payloads]
+
+    b = MicroBatcher(process, max_batch_size=4, max_wait_s=60.0,
+                     n_workers=n_workers).start()
+    tickets = b.submit_many(["a", "poison", "b", "c"])  # one size-4 batch
+    # healthy neighbours are served via the per-payload isolation retry
+    assert tickets[0].result(timeout=30.0) == "A"
+    assert tickets[2].result(timeout=30.0) == "B"
+    assert tickets[3].result(timeout=30.0) == "C"
+    with pytest.raises(ValueError, match="poisoned"):
+        tickets[1].result(timeout=30.0)
+    assert b.metrics.worker_errors == 1
+    assert b.metrics.requests_failed == 1
+    assert b.metrics.requests_served == 3
+
+    # the worker loop survived: later submissions are still served by the
+    # background workers (not the stop-drain path)
+    after = b.submit_many(["x", "y", "z", "w"])
+    assert [t.result(timeout=30.0) for t in after] == ["X", "Y", "Z", "W"]
+    assert b.metrics.requests_served == 7
+    b.stop()
+
+
+def test_poison_flood_keeps_workers_alive():
+    """Many poison payloads across many batches: every healthy ticket is
+    served, every poison ticket carries its own error, errors are counted
+    per isolation, and the workers survive the whole flood."""
+    def process(key, payloads):
+        if any(p % 7 == 3 for p in payloads):
+            raise RuntimeError("boom")
+        return [p * 10 for p in payloads]
+
+    b = MicroBatcher(process, max_batch_size=4, max_wait_s=1e-4,
+                     n_workers=4).start()
+    tickets = b.submit_many(range(64))
+    poisoned = {p for p in range(64) if p % 7 == 3}
+    for p, t in enumerate(tickets):
+        if p in poisoned:
+            with pytest.raises(RuntimeError, match="boom"):
+                t.result(timeout=30.0)
+        else:
+            assert t.result(timeout=30.0) == p * 10
+    b.stop()
+    m = b.metrics
+    assert m.requests_failed == len(poisoned)
+    assert m.requests_served == 64 - len(poisoned)
+    assert m.worker_errors == len(poisoned)
+
+
+# ---------------------------------------------------------------------------
+# EdgeDetectService: ragged shapes x producer threads x workers
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_workers", WORKER_COUNTS)
+def test_service_stress_ragged_shapes_bit_identical(n_workers):
+    """Concurrent producers submitting mixed-shape images through a
+    multi-worker service: every result matches the direct single-image
+    pipeline bit-for-bit (so no cross-wiring can hide behind shapes)."""
+    imgs = mixed_shape_batch(18, shapes=((8, 8), (13, 9), (16, 16)),
+                             noise=2.0)
+    svc = EdgeDetectService("exact", max_batch_size=4, max_wait_s=1e-3,
+                            bucket_granularity=8, n_workers=n_workers)
+    try:
+        refs = [np.asarray(conv.edge_detect_batched(im[None],
+                                                    svc.substrate))[0]
+                for im in imgs]
+        results = [None] * len(imgs)
+        errors = []
+
+        def produce(lo, hi):
+            try:
+                tickets = [(i, svc.submit(imgs[i])) for i in range(lo, hi)]
+                for i, t in tickets:
+                    results[i] = t.result(timeout=60.0)
+            except BaseException as e:  # noqa: BLE001 - surfaced below
+                errors.append(e)
+
+        threads = [threading.Thread(target=produce, args=(lo, lo + 6))
+                   for lo in range(0, 18, 6)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    finally:
+        svc.close()
+    assert not errors, errors
+    for i, (out, ref) in enumerate(zip(results, refs)):
+        assert out is not None and np.array_equal(out, ref), \
+            f"image {i} diverged (shape {imgs[i].shape})"
+    m = svc.metrics
+    assert m.requests_served == len(imgs) and m.requests_failed == 0
+    assert sum(m.batches_by_reason.values()) == \
+        sum(m.worker_batches.values())
