@@ -9,9 +9,11 @@ benches (fig9, kernel) default to every substrate registered in
 mesh of every visible device — the TPU-native run's sharded sweep).
 
 Machine-readable artifacts: the ``kernel`` bench writes
-``BENCH_kernels.json`` and the ``serve_edge`` bench writes
+``BENCH_kernels.json``, the ``serve_edge`` bench writes
 ``BENCH_serving.json`` (throughput/latency records + the substrate-meter
-energy rollup) at the repo root, so one ``python -m benchmarks.run``
+energy rollup), and the ``autotune`` bench writes ``BENCH_autotune.json``
+(plan-vs-uniform PDP/PSNR table; ``--plan`` evaluates a saved plan/bundle
+instead of searching) at the repo root, so one ``python -m benchmarks.run``
 produces the full perf trajectory. Trace files are opt-in via each bench's
 standalone ``--trace`` flag.
 """
@@ -22,6 +24,7 @@ import sys
 import traceback
 
 from benchmarks import (
+    autotune_plan,
     edge_serving,
     fig9_edge,
     fig10_tradeoff,
@@ -41,6 +44,7 @@ MODULES = {
     "fig10": fig10_tradeoff,
     "kernel": kernelbench,
     "serve_edge": edge_serving,
+    "autotune": autotune_plan,
 }
 
 
@@ -57,6 +61,9 @@ def main() -> None:
     ap.add_argument("--sharded", action="store_true",
                     help="add the kernel bench's sharded dot_general rows "
                          "(Partitioning over a mesh of all visible devices)")
+    ap.add_argument("--plan", default=None, metavar="PATH",
+                    help="substrate-plan JSON or bundle dir for the "
+                         "autotune bench (default: greedy search)")
     args = ap.parse_args()
     substrates = args.substrates.split(",") if args.substrates else None
 
@@ -68,6 +75,8 @@ def main() -> None:
         kwargs = {"substrates": substrates} if name in _SUBSTRATE_SWEEPS else {}
         if name == "kernel":
             kwargs["sharded"] = args.sharded
+        if name == "autotune":
+            kwargs["plan"] = args.plan
         try:
             rows.extend(mod.run(**kwargs))
         except Exception:  # noqa: BLE001

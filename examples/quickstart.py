@@ -1,7 +1,14 @@
 """Quickstart: the paper's approximate multiplier in 60 seconds.
 
-Run: PYTHONPATH=src python examples/quickstart.py
+Run: PYTHONPATH=src python examples/quickstart.py [--plan path.json]
+
+``--plan`` loads a per-site substrate plan (a plan JSON or a bundle dir —
+e.g. one written by ``python -m repro.launch.autotune``) for the final
+mixed-substrate edge-detection step; without it a small hand-written
+mixed plan demonstrates the same API.
 """
+import argparse
+
 import jax.numpy as jnp
 import numpy as np
 
@@ -9,7 +16,7 @@ from repro.core import energy, lut, metrics, multiplier as m
 from repro.nn import approx_dot
 
 
-def main():
+def main(plan_path=None):
     # 1. multiply two signed 8-bit numbers with the paper's multiplier
     a, b = jnp.int32(-97), jnp.int32(45)
     print(f"exact   {int(a)} x {int(b)} = {int(a) * int(b)}")
@@ -39,6 +46,35 @@ def main():
     print(f"\n256x256 product LUT built; f(0,0) = {table[128, 128]} "
           "(the compensation constant fires on zero operands — true to the netlist)")
 
+    # 6. per-site substrate plans: mixed-substrate edge detection
+    import pathlib
+
+    from repro.data import test_image
+    from repro.nn import conv
+    from repro.nn.plan import SubstratePlan, load_plan
+
+    if plan_path:
+        p = pathlib.Path(plan_path)
+        if p.is_dir():
+            from repro.checkpoint import load_plan_bundle
+            plan, _, _ = load_plan_bundle(str(p))
+        else:
+            plan = load_plan(str(p))
+    else:  # cheaper center tap, full-width smoothing ring
+        plan = SubstratePlan(
+            default="approx_bitexact:proposed@8",
+            rules=(("conv.edge.center", "approx_bitexact:proposed@6"),))
+    img = test_image(96, 96)[None]
+    ref = np.asarray(conv.edge_detect_batched(img, "exact"))
+    planned = np.asarray(conv.edge_detect_planned(img, plan))
+    print(f"\nplanned edge detection under {plan.label}: "
+          f"PSNR={conv.psnr(ref, planned):.2f} dB vs exact")
+    for pattern, spec in plan.rules:
+        print(f"  {pattern} -> {spec}")
+
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--plan", default=None, metavar="PATH",
+                    help="substrate plan JSON or bundle dir for step 6")
+    main(plan_path=ap.parse_args().plan)

@@ -1,6 +1,8 @@
-"""Fault-tolerant checkpointing."""
+"""Fault-tolerant checkpointing + substrate-plan bundles."""
 from repro.checkpoint.ckpt import (  # noqa: F401
     CheckpointManager,
     load_checkpoint,
+    load_plan_bundle,
     save_checkpoint,
+    save_plan_bundle,
 )

@@ -138,6 +138,89 @@ def load_checkpoint(directory: str, template, step: Optional[int] = None,
     return tree, step, manifest_all.get("extra", {})
 
 
+# ---------------------------------------------------------------------------
+# substrate-plan bundles (plan.json + optional params) — the autotuner's
+# loadable artifact; serving round-trips it (launch/serve.py --plan)
+# ---------------------------------------------------------------------------
+
+
+def save_plan_bundle(directory: str, plan, params=None,
+                     extra: Optional[dict] = None) -> str:
+    """Atomic write of a substrate-plan bundle directory.
+
+    Layout: ``plan.json`` (the :class:`repro.nn.plan.SubstratePlan` schema),
+    ``manifest.json`` (kind/version/extra + array dtypes), and — when
+    ``params`` is given — ``arrays.npz`` with the flattened param tree
+    (same encoding as checkpoints, so bf16 round-trips). Written under a
+    ``.tmp`` name and renamed into place; an existing bundle at
+    ``directory`` is replaced atomically.
+    """
+    from repro.nn import plan as plan_mod
+
+    plan = plan_mod.as_plan(plan)
+    directory = os.path.abspath(directory)
+    os.makedirs(os.path.dirname(directory) or ".", exist_ok=True)
+    tmp = directory + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    with open(os.path.join(tmp, "plan.json"), "w") as f:
+        json.dump(plan.to_dict(), f, indent=2)
+        f.write("\n")
+    manifest = {"kind": "substrate-plan-bundle", "version": 1,
+                "time": time.time(), "has_params": params is not None,
+                "dtypes": {}, "extra": extra or {}}
+    if params is not None:
+        flat = _flatten(params)
+        encoded = {}
+        for k, v in flat.items():
+            arr, dt = _encode(v)
+            encoded[k] = arr
+            if dt is not None:
+                manifest["dtypes"][k] = dt
+        manifest["n_arrays"] = len(flat)
+        np.savez(os.path.join(tmp, "arrays.npz"), **encoded)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(directory):
+        shutil.rmtree(directory)
+    os.rename(tmp, directory)
+    return directory
+
+
+def load_plan_bundle(directory: str, params_template=None):
+    """Load a plan bundle → ``(plan, params, extra)``.
+
+    ``params_template`` restores the saved arrays into its tree structure
+    (``jax.device_put``, elastic like :func:`load_checkpoint`); without a
+    template, ``params`` is the raw flat ``{path: np.ndarray}`` dict when
+    the bundle carries arrays, else None.
+    """
+    from repro.nn import plan as plan_mod
+
+    manifest_path = os.path.join(directory, "manifest.json")
+    with open(manifest_path) as f:
+        manifest = json.load(f)
+    if manifest.get("kind") != "substrate-plan-bundle":
+        raise ValueError(
+            f"{directory} is not a substrate-plan bundle "
+            f"(kind={manifest.get('kind')!r})")
+    plan = plan_mod.load_plan(os.path.join(directory, "plan.json"))
+    params = None
+    if manifest.get("has_params"):
+        dtypes = manifest.get("dtypes", {})
+        with np.load(os.path.join(directory, "arrays.npz")) as z:
+            flat = {k: _decode(z[k], dtypes.get(k)) for k in z.files}
+        if params_template is not None:
+            params = _unflatten_into(params_template, flat)
+            params = jax.tree_util.tree_map(jax.device_put, params)
+        else:
+            params = flat
+    elif params_template is not None:
+        raise ValueError(f"bundle {directory} carries no params to restore")
+    return plan, params, manifest.get("extra", {})
+
+
 class CheckpointManager:
     """Async save + retention + resume discovery."""
 

@@ -1,7 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = (os.environ.get("_DRYRUN_EXTRA_XLA", "") +
-                           " --xla_force_host_platform_device_count=512").strip()
-
 """Perf hillclimbing driver (§Perf methodology).
 
 For a chosen (arch × shape) cell, lowers named VARIANTS — config knobs
@@ -11,20 +7,40 @@ driven from the EXPERIMENTS.md log.
 
   python -m repro.launch.hillclimb --arch kimi-k2-1t-a32b --shape train_4k \
       --variants base,remat_off,attn_chunk_2048 --out results_hillclimb.json
+
+Production meshes need 512 (emulated) host devices, which XLA only grants
+via ``XLA_FLAGS`` set *before* backend initialization. That mutation is
+opt-in now: it runs under ``python -m repro.launch.hillclimb`` (the
+``__main__`` block calls :func:`force_host_devices` before any JAX call) —
+merely importing this module (e.g. for :data:`VARIANTS` or
+:func:`corrected_with`) no longer touches the process environment.
 """
-import argparse  # noqa: E402
-import json  # noqa: E402
-import time  # noqa: E402
-import traceback  # noqa: E402
+import argparse
+import json
+import os
+import time
+import traceback
 
-import jax  # noqa: E402
+import jax
 
-from repro.launch import mesh as mesh_lib  # noqa: E402
-from repro.launch import roofline  # noqa: E402
-from repro.launch.rooffix import COST_ATTN_CHUNK, COST_LOSS_CHUNK, _metrics_for  # noqa: E402
-from repro.models import lm  # noqa: E402
-from repro.models import registry as reg  # noqa: E402
-from repro.models import sharding as sh  # noqa: E402
+from repro.launch import mesh as mesh_lib
+from repro.launch import roofline
+from repro.launch.rooffix import COST_ATTN_CHUNK, COST_LOSS_CHUNK, _metrics_for
+from repro.models import lm
+from repro.models import registry as reg
+from repro.models import sharding as sh
+
+
+def force_host_devices(count: int = 512) -> None:
+    """Opt in to the emulated multi-device host platform.
+
+    Appends ``--xla_force_host_platform_device_count=<count>`` to
+    ``XLA_FLAGS`` (preserving ``_DRYRUN_EXTRA_XLA``). Call before JAX
+    initializes its backend or the flag is ignored.
+    """
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("_DRYRUN_EXTRA_XLA", "") +
+        f" --xla_force_host_platform_device_count={count}").strip()
 
 # variant -> (config overrides, logical-rule overrides)
 VARIANTS = {
@@ -63,7 +79,7 @@ VARIANTS = {
     "attn_chunk_256": ({"attn_chunk": 256}, {}),
     "attn_chunk_128": ({"attn_chunk": 128}, {}),
     # paper's technique at scale: int8 matmuls + separable error correction
-    "approx_stat": ({"dot_mode": "approx_stat"}, {}),
+    "approx_stat": ({"dot_plan": "approx_stat"}, {}),
 }
 
 
@@ -157,4 +173,5 @@ def main():
 
 
 if __name__ == "__main__":
+    force_host_devices()
     main()

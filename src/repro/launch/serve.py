@@ -12,6 +12,7 @@ load it at ``ui.perfetto.dev``. See ``docs/observability.md``.
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
@@ -34,6 +35,11 @@ def main():
     ap.add_argument("--workers", type=int, default=1,
                     help="concurrent decode loops (each with its own KV "
                          "caches; requests split round-robin)")
+    ap.add_argument("--plan", default=None, metavar="PATH",
+                    help="substrate plan: a plan JSON file or a plan-bundle "
+                         "directory (see docs/plans.md). Serves the model "
+                         "with per-site mixed substrates; a bundle that "
+                         "carries params restores them too.")
     ap.add_argument("--metrics-out", default=None, metavar="PATH",
                     help="dump serving metrics (.prom/.txt → Prometheus "
                          "text, else JSON)")
@@ -46,8 +52,21 @@ def main():
     cfg = reg.get_config(args.arch, **overrides_from(args))
     bundle = reg._BUILDERS[cfg.family](cfg)
     params = bundle.init_params(jax.random.PRNGKey(0))
+    plan = None
+    if args.plan:
+        from repro import checkpoint as ckpt
+        from repro.nn import plan as plan_mod
+
+        if os.path.isdir(args.plan):
+            plan, raw, _ = ckpt.load_plan_bundle(args.plan)
+            if raw is not None:   # bundle ships params: restore into our tree
+                _, params, _ = ckpt.load_plan_bundle(
+                    args.plan, params_template=params)
+        else:
+            plan = plan_mod.load_plan(args.plan)
+        print(f"[serve] substrate plan: {plan.label}")
     engine = ServingEngine(bundle, params, batch_size=args.batch,
-                           max_len=args.max_len)
+                           max_len=args.max_len, substrate=plan)
 
     rng = np.random.default_rng(0)
     reqs = [Request(prompt=list(rng.integers(1, cfg.vocab, size=4)),

@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -26,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import sharding as sh
+from repro.nn import plan as splan
 from repro.nn import substrate as psub
 
 Array = jnp.ndarray
@@ -70,9 +72,13 @@ class ModelConfig:
     n_encoder_layers: int = 0
     # execution
     dtype: Any = jnp.bfloat16
-    dot_mode: str = "exact"        # substrate spec "backend[:mult_name]" —
-                                   # any repro.nn.substrate backend: exact |
-                                   # int8 | approx_{bitexact,lut,stat,pallas}
+    dot_mode: str = "exact"        # DEPRECATED single substrate spec
+                                   # "backend[:mult_name]"; kept as the
+                                   # uniform-plan shim — prefer dot_plan
+    dot_plan: Any = None           # site-addressed substrate assignment:
+                                   # a repro.nn.plan.SubstratePlan (or a
+                                   # spec string / plan dict, normalized by
+                                   # substrate_plan()); None → dot_mode
     remat: bool = True
     attn_chunk: int = 512
     loss_chunk: int = 512
@@ -135,20 +141,69 @@ class ModelConfig:
 _DENSE_QUANT = psub.QuantPolicy()
 
 
-def dense(cfg: ModelConfig, x: Array, w: Array, b: Optional[Array] = None) -> Array:
+def substrate_plan(cfg: ModelConfig) -> "splan.SubstratePlan":
+    """The config's :class:`~repro.nn.plan.SubstratePlan`.
+
+    ``cfg.dot_plan`` wins when set (a plan, spec string, or plan dict —
+    normalized through :func:`repro.nn.plan.as_plan`); otherwise the legacy
+    ``cfg.dot_mode`` spec auto-wraps into a uniform single-rule plan. The
+    legacy path emits a DeprecationWarning for non-default specs — set
+    ``dot_plan=SubstratePlan.uniform(spec)`` (or just ``dot_plan=spec``)
+    instead.
+    """
+    if cfg.dot_plan is not None:
+        return splan.as_plan(cfg.dot_plan)
+    if cfg.dot_mode != "exact":
+        warnings.warn(
+            "cfg.dot_mode is deprecated; set cfg.dot_plan to a "
+            "repro.nn.plan.SubstratePlan (a spec string still means a "
+            "uniform plan)", DeprecationWarning, stacklevel=3)
+    return splan.SubstratePlan.uniform(cfg.dot_mode)
+
+
+def dense(cfg: ModelConfig, x: Array, w: Array, b: Optional[Array] = None,
+          *, site: Optional[str] = None) -> Array:
     """Matmul under the configured product substrate (the paper's technique).
 
-    ``cfg.dot_mode`` is a substrate spec; resolution is an lru-cached dict
-    lookup, so per-call overhead is negligible and bundles can also resolve
-    it once at build time (``registry.build_bundle``). The contraction runs
-    through ``dot_general`` with the default quantization policy; when a
+    The substrate is chosen by the config's :func:`substrate_plan` at the
+    ambient contraction site (``site`` is the leaf segment under the
+    enclosing :func:`repro.nn.plan.site_scope` stack — e.g. ``"wq"`` under
+    ``layer.3.attn`` resolves at ``layer.3.attn.wq``). Resolution is
+    lru-cached per (plan, site), so per-call overhead is negligible.
+
+    Under a :func:`repro.nn.plan.scan_site_scope` (stacked layers traced
+    once under ``lax.scan``), the per-repeat assignments are resolved at
+    trace time: when every repeat agrees — the common case — the call
+    stays a single static ``dot_general``; otherwise the distinct
+    substrates become ``jax.lax.switch`` branches selected by the carried
+    layer index, so mixed per-layer plans survive stacked params.
+
+    The contraction runs through ``dot_general`` with the default
+    quantization policy; when a
     :func:`repro.nn.substrate.partitioning_scope` is active (the launch
     layer's ``--dot-partition`` mesh path), the contraction lowers through
     shard_map instead of relying on GSPMD to shard the scalar-emulation HLO.
     """
-    spec = psub.ContractionSpec.matmul(
-        quant=_DENSE_QUANT, partitioning=psub.current_partitioning())
-    out = psub.get_substrate(cfg.dot_mode).dot_general(x, w, spec)
+    plan = substrate_plan(cfg)
+    part = psub.current_partitioning()
+    d = splan.dispatch(plan, site)
+    if d.index is None:
+        spec_str, label = d.groups[0]
+        cspec = psub.ContractionSpec.matmul(
+            quant=_DENSE_QUANT, partitioning=part, site=label)
+        out = psub.get_substrate(spec_str).dot_general(x, w, cspec)
+    else:
+        branches = []
+        for spec_str, label in d.groups:
+            cspec = psub.ContractionSpec.matmul(
+                quant=_DENSE_QUANT, partitioning=part, site=label)
+
+            def branch(xx, ww, _s=psub.get_substrate(spec_str), _cs=cspec):
+                return _s.dot_general(xx, ww, _cs)
+
+            branches.append(branch)
+        sel = jnp.asarray(np.asarray(d.branch_of, np.int32))[d.index]
+        out = jax.lax.switch(sel, branches, x, w)
     if b is not None:
         out = out + b.astype(out.dtype)
     return out
@@ -295,14 +350,18 @@ def attn_block(cfg: ModelConfig, p: Params, x: Array, *, positions: Array,
     b, s, d = x.shape
     h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.dh
     xn = rms_norm(x, p["ln"])
-    q = dense(cfg, xn, p["wq"]["w"], p["wq"].get("b")).reshape(b, s, h, dh)
-    if cross_kv is None:
-        k = dense(cfg, xn, p["wk"]["w"], p["wk"].get("b")).reshape(b, s, hkv, dh)
-        v = dense(cfg, xn, p["wv"]["w"], p["wv"].get("b")).reshape(b, s, hkv, dh)
-        q = rope(q, positions, cfg.rope_theta)
-        k = rope(k, positions, cfg.rope_theta)
-    else:
-        k, v = cross_kv
+    with splan.site_scope("attn"):
+        q = dense(cfg, xn, p["wq"]["w"], p["wq"].get("b"),
+                  site="wq").reshape(b, s, h, dh)
+        if cross_kv is None:
+            k = dense(cfg, xn, p["wk"]["w"], p["wk"].get("b"),
+                      site="wk").reshape(b, s, hkv, dh)
+            v = dense(cfg, xn, p["wv"]["w"], p["wv"].get("b"),
+                      site="wv").reshape(b, s, hkv, dh)
+            q = rope(q, positions, cfg.rope_theta)
+            k = rope(k, positions, cfg.rope_theta)
+        else:
+            k, v = cross_kv
 
     q = sh.constrain(q, "batch", "seq", "heads", "head_dim")
 
@@ -324,7 +383,8 @@ def attn_block(cfg: ModelConfig, p: Params, x: Array, *, positions: Array,
         causal=causal, window=window, chunk=cfg.attn_chunk,
         unroll=cfg.cost_unroll,
     )
-    out = dense(cfg, out.reshape(b, s, h * dh), p["wo"]["w"])
+    with splan.site_scope("attn"):
+        out = dense(cfg, out.reshape(b, s, h * dh), p["wo"]["w"], site="wo")
     return x + out.astype(x.dtype), new_cache
 
 
@@ -346,9 +406,11 @@ def init_ffn(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> Params:
 
 def ffn_block(cfg: ModelConfig, p: Params, x: Array) -> Array:
     xn = rms_norm(x, p["ln"])
-    hidden = jax.nn.silu(dense(cfg, xn, p["wg"]["w"])) * dense(cfg, xn, p["wi"]["w"])
-    hidden = sh.constrain(hidden, "batch", "seq", "mlp")
-    return x + dense(cfg, hidden, p["wo"]["w"]).astype(x.dtype)
+    with splan.site_scope("ffn"):
+        hidden = (jax.nn.silu(dense(cfg, xn, p["wg"]["w"], site="wg"))
+                  * dense(cfg, xn, p["wi"]["w"], site="wi"))
+        hidden = sh.constrain(hidden, "batch", "seq", "mlp")
+        return x + dense(cfg, hidden, p["wo"]["w"], site="wo").astype(x.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -453,8 +515,9 @@ def _moe_block_local(cfg: ModelConfig, p: Params, x: Array) -> Array:
     out = _expert_ffn(p, buf)
     y = _combine_local(out, info, t)
     if cfg.shared_expert:
-        y = y + (ffn_block(cfg, p["shared"], xn.reshape(b, s, d))
-                 - xn.reshape(b, s, d)).reshape(t, d)
+        with splan.site_scope("moe", "shared"):
+            y = y + (ffn_block(cfg, p["shared"], xn.reshape(b, s, d))
+                     - xn.reshape(b, s, d)).reshape(t, d)
     return x + y.reshape(b, s, d).astype(x.dtype)
 
 
@@ -504,8 +567,9 @@ def _moe_block_ep(cfg: ModelConfig, p: Params, x: Array, mesh, dp) -> Array:
     )(xn, p["router"], p["wi"], p["wg"], p["wo"])
 
     if cfg.shared_expert:
-        y = y + (ffn_block(cfg, p["shared"], xn.reshape(b, s, d))
-                 - xn.reshape(b, s, d)).reshape(t, d)
+        with splan.site_scope("moe", "shared"):
+            y = y + (ffn_block(cfg, p["shared"], xn.reshape(b, s, d))
+                     - xn.reshape(b, s, d)).reshape(t, d)
     return x + y.reshape(b, s, d).astype(x.dtype)
 
 

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import common as cm
+from repro.nn import plan as splan
 
 Array = jnp.ndarray
 Params = Dict[str, Any]
@@ -43,14 +44,20 @@ def encode(cfg: cm.ModelConfig, params: Params, frames: Array) -> Array:
     positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
     x = frames.astype(cfg.dtype)
 
-    def body(xc, p):
+    ne = jax.tree_util.tree_leaves(params["enc"])[0].shape[0]
+    enc_sites = [f"enc.{i}" for i in range(ne)]
+
+    def body(xc, xs):
+        p, li = xs
+
         def one(xx):
-            y, _ = cm.attn_block(cfg, p["attn"], xx, positions=positions,
-                                 causal=False)
-            return cm.ffn_block(cfg, p["ffn"], y)
+            with splan.scan_site_scope(li, enc_sites):
+                y, _ = cm.attn_block(cfg, p["attn"], xx, positions=positions,
+                                     causal=False)
+                return cm.ffn_block(cfg, p["ffn"], y)
         return (jax.checkpoint(one)(xc) if cfg.remat else one(xc)), None
 
-    x, _ = jax.lax.scan(body, x, params["enc"])
+    x, _ = jax.lax.scan(body, x, (params["enc"], jnp.arange(ne)))
     return x
 
 
@@ -60,20 +67,32 @@ def decode_train(cfg: cm.ModelConfig, params: Params, tokens: Array,
     b, s, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
 
-    def body(xc, p):
+    dec_sites = [f"dec.{i}" for i in range(cfg.n_layers)]
+
+    def body(xc, xs):
+        p, li = xs
+
         def one(xx):
-            y, _ = cm.attn_block(cfg, p["self"], xx, positions=positions)
-            # cross attention: K/V from encoder output through this layer's proj
-            hkv, dh = cfg.n_kv_heads, cfg.dh
-            be, se, _ = enc_out.shape
-            ck = cm.dense(cfg, enc_out, p["cross"]["wk"]["w"]).reshape(be, se, hkv, dh)
-            cv = cm.dense(cfg, enc_out, p["cross"]["wv"]["w"]).reshape(be, se, hkv, dh)
-            y, _ = cm.attn_block(cfg, p["cross"], y, positions=positions,
-                                 cross_kv=(ck, cv))
-            return cm.ffn_block(cfg, p["ffn"], y)
+            with splan.scan_site_scope(li, dec_sites):
+                with splan.site_scope("self"):
+                    y, _ = cm.attn_block(cfg, p["self"], xx,
+                                         positions=positions)
+                # cross attention: K/V from encoder output through this
+                # layer's projections
+                hkv, dh = cfg.n_kv_heads, cfg.dh
+                be, se, _ = enc_out.shape
+                with splan.site_scope("cross"):
+                    ck = cm.dense(cfg, enc_out, p["cross"]["wk"]["w"],
+                                  site="wk").reshape(be, se, hkv, dh)
+                    cv = cm.dense(cfg, enc_out, p["cross"]["wv"]["w"],
+                                  site="wv").reshape(be, se, hkv, dh)
+                    y, _ = cm.attn_block(cfg, p["cross"], y,
+                                         positions=positions,
+                                         cross_kv=(ck, cv))
+                return cm.ffn_block(cfg, p["ffn"], y)
         return (jax.checkpoint(one)(xc) if cfg.remat else one(xc)), None
 
-    x, _ = jax.lax.scan(body, x, params["dec"])
+    x, _ = jax.lax.scan(body, x, (params["dec"], jnp.arange(cfg.n_layers)))
     return x
 
 
@@ -102,18 +121,27 @@ def decode_step(cfg: cm.ModelConfig, params: Params, state, token: Array,
     hkv, dh = cfg.n_kv_heads, cfg.dh
     be, se, _ = enc_out.shape
 
+    dec_sites = [f"dec.{i}" for i in range(cfg.n_layers)]
+
     def body(xc, xs):
-        p, kv = xs
-        y, nkv = cm.attn_block(cfg, p["self"], xc, positions=positions,
-                               kv_cache=kv, cache_len=cache_len)
-        ck = cm.dense(cfg, enc_out, p["cross"]["wk"]["w"]).reshape(be, se, hkv, dh)
-        cv = cm.dense(cfg, enc_out, p["cross"]["wv"]["w"]).reshape(be, se, hkv, dh)
-        y, _ = cm.attn_block(cfg, p["cross"], y, positions=positions,
-                             cross_kv=(ck, cv))
-        y = cm.ffn_block(cfg, p["ffn"], y)
+        p, kv, li = xs
+        with splan.scan_site_scope(li, dec_sites):
+            with splan.site_scope("self"):
+                y, nkv = cm.attn_block(cfg, p["self"], xc,
+                                       positions=positions,
+                                       kv_cache=kv, cache_len=cache_len)
+            with splan.site_scope("cross"):
+                ck = cm.dense(cfg, enc_out, p["cross"]["wk"]["w"],
+                              site="wk").reshape(be, se, hkv, dh)
+                cv = cm.dense(cfg, enc_out, p["cross"]["wv"]["w"],
+                              site="wv").reshape(be, se, hkv, dh)
+                y, _ = cm.attn_block(cfg, p["cross"], y, positions=positions,
+                                     cross_kv=(ck, cv))
+            y = cm.ffn_block(cfg, p["ffn"], y)
         return y, nkv
 
-    x, new_kv = jax.lax.scan(body, x, (params["dec"], state["self_kv"]))
+    x, new_kv = jax.lax.scan(
+        body, x, (params["dec"], state["self_kv"], jnp.arange(cfg.n_layers)))
     logits = cm.lm_logits(cfg, params["embed"], x)
     return logits, {"self_kv": new_kv, "enc_out": enc_out}
 

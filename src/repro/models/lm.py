@@ -19,6 +19,7 @@ import jax.numpy as jnp
 
 from repro.models import common as cm
 from repro.models import sharding as sh
+from repro.nn import plan as splan
 
 Array = jnp.ndarray
 Params = Dict[str, Any]
@@ -127,24 +128,34 @@ def forward(cfg: cm.ModelConfig, params: Params, tokens: Array,
 
     x = cm.embed(cfg, params["embed"], tokens)
     if cfg.family == "vlm" and patch_embeds is not None:
-        pe = cm.dense(cfg, patch_embeds.astype(x.dtype), params["patch_proj"]["w"])
+        pe = cm.dense(cfg, patch_embeds.astype(x.dtype),
+                      params["patch_proj"]["w"], site="patch_proj")
         x = jnp.concatenate([pe, x], axis=1)
     b, s, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
 
-    def unit_body(xc, unit_params):
+    # per-repeat site names for in-unit position u: layer index r*period+u
+    site_names = [[f"layer.{r * period + u}" for r in range(n_units)]
+                  for u in range(period)]
+
+    def unit_body(xc, xs):
+        unit_params, repeat = xs
         for u in range(period):
-            def one(xx, pp=unit_params[u], desc=plan[u]):
-                y, _ = _apply_layer(cfg, pp, xx, desc, positions)
+            def one(xx, pp=unit_params[u], desc=plan[u], names=site_names[u]):
+                with splan.scan_site_scope(repeat, names):
+                    y, _ = _apply_layer(cfg, pp, xx, desc, positions)
                 return y
             xc = _maybe_remat(cfg, one)(xc)
         return xc, None
 
     if n_units:
-        x, _ = jax.lax.scan(unit_body, x, _stack_unit(params["unit"]))
+        x, _ = jax.lax.scan(unit_body, x,
+                            (_stack_unit(params["unit"]),
+                             jnp.arange(n_units)))
     for i, p in enumerate(params["tail"]):
         desc = plan[n_units * period + i]
-        x, _ = _apply_layer(cfg, p, x, desc, positions)
+        with splan.site_scope(f"layer.{n_units * period + i}"):
+            x, _ = _apply_layer(cfg, p, x, desc, positions)
     return x
 
 
@@ -199,27 +210,35 @@ def decode_step(cfg: cm.ModelConfig, params: Params, caches, token: Array,
     b = x.shape[0]
     positions = jnp.broadcast_to(cache_len, (b, 1)).astype(jnp.int32)
 
+    site_names = [[f"layer.{r * period + u}" for r in range(n_units)]
+                  for u in range(period)]
+
     new_unit_caches = []
     if n_units:
         def unit_body(xc, xs):
-            unit_params, unit_cache = xs
+            unit_params, unit_cache, repeat = xs
             new_caches_u = []
             for u in range(period):
-                y, nc = _apply_layer(cfg, unit_params[u], xc, plan[u], positions,
-                                     kv_cache=unit_cache[u], cache_len=cache_len)
+                with splan.scan_site_scope(repeat, site_names[u]):
+                    y, nc = _apply_layer(cfg, unit_params[u], xc, plan[u],
+                                         positions, kv_cache=unit_cache[u],
+                                         cache_len=cache_len)
                 new_caches_u.append(nc)
                 xc = y
             return xc, tuple(new_caches_u)
 
         x, new_unit = jax.lax.scan(
-            unit_body, x, (_stack_unit(params["unit"]), tuple(caches["unit"]))
+            unit_body, x, (_stack_unit(params["unit"]),
+                           tuple(caches["unit"]), jnp.arange(n_units))
         )
         new_unit_caches = list(new_unit)
     new_tail = []
     for i, p in enumerate(params["tail"]):
         desc = plan[n_units * period + i]
-        x, nc = _apply_layer(cfg, p, x, desc, positions,
-                             kv_cache=caches["tail"][i], cache_len=cache_len)
+        with splan.site_scope(f"layer.{n_units * period + i}"):
+            x, nc = _apply_layer(cfg, p, x, desc, positions,
+                                 kv_cache=caches["tail"][i],
+                                 cache_len=cache_len)
         new_tail.append(nc)
     logits = cm.lm_logits(cfg, params["embed"], x)
     return logits, {"unit": new_unit_caches, "tail": new_tail}

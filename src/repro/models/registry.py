@@ -47,8 +47,10 @@ class ModelBundle:
     prefill: Callable          # (params, batch) -> logits
     decode_step: Callable      # (params, state, batch) -> (logits, state)
     init_decode_state: Callable
-    # cfg.dot_mode resolved once at build time (ProductSubstrate instance)
+    # the config's SubstratePlan + its default-rule ProductSubstrate,
+    # both resolved once at build time
     substrate: Any = None
+    plan: Any = None
 
 
 def _lm_bundle(cfg: cm.ModelConfig) -> ModelBundle:
@@ -101,14 +103,17 @@ def _encdec_bundle(cfg: cm.ModelConfig) -> ModelBundle:
 
 
 def _with_substrate(builder: Callable) -> Callable:
-    """Wrap a family builder so cfg.dot_mode resolves to a substrate object
-    exactly once at bundle build (get_substrate is lru-cached, so layers
-    re-resolving by spec string hit the same instance)."""
+    """Wrap a family builder so the config's substrate plan resolves exactly
+    once at bundle build (``get_substrate`` is lru-cached, so layers
+    re-resolving by spec string hit the same instances). ``bundle.substrate``
+    is the plan's *default* substrate — per-site overrides resolve inside
+    ``models.common.dense`` via the plan itself (``bundle.plan``)."""
 
     def build(cfg: cm.ModelConfig) -> ModelBundle:
         bundle = builder(cfg)
+        plan = cm.substrate_plan(cfg)
         return dataclasses.replace(
-            bundle, substrate=psub.get_substrate(cfg.dot_mode))
+            bundle, substrate=psub.get_substrate(plan.default), plan=plan)
 
     return build
 

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 
 from repro.models import common as cm
 from repro.models import sharding as sh
+from repro.nn import plan as splan
 
 Array = jnp.ndarray
 Params = Dict[str, Any]
@@ -100,20 +101,20 @@ def mlstm_block(cfg: cm.ModelConfig, p: Params, x: Array,
     b, s, d = x.shape
     h = cfg.n_heads
     xn = cm.rms_norm(x, p["ln"])
-    q = _split_heads(cm.dense(cfg, xn, p["wq"]["w"]), h) / math.sqrt(d // h)
-    k = _split_heads(cm.dense(cfg, xn, p["wk"]["w"]), h)
-    v = _split_heads(cm.dense(cfg, xn, p["wv"]["w"]), h)
-    i_gate = jax.nn.sigmoid(cm.dense(cfg, xn, p["wi"]["w"]).astype(jnp.float32))
-    f_gate = jax.nn.sigmoid(cm.dense(cfg, xn, p["wf"]["w"]).astype(jnp.float32) + 3.0)
+    q = _split_heads(cm.dense(cfg, xn, p["wq"]["w"], site="wq"), h) / math.sqrt(d // h)
+    k = _split_heads(cm.dense(cfg, xn, p["wk"]["w"], site="wk"), h)
+    v = _split_heads(cm.dense(cfg, xn, p["wv"]["w"], site="wv"), h)
+    i_gate = jax.nn.sigmoid(cm.dense(cfg, xn, p["wi"]["w"], site="wi").astype(jnp.float32))
+    f_gate = jax.nn.sigmoid(cm.dense(cfg, xn, p["wf"]["w"], site="wf").astype(jnp.float32) + 3.0)
     if state is None:
         state = jnp.zeros((b, h, d // h, d // h), jnp.float32)
     y, new_state = mlstm_scan(q, k, v, i_gate, f_gate, state,
                               chunk=min(cfg.attn_chunk, s),
                               unroll=cfg.cost_unroll)
     y = y.reshape(b, s, d).astype(x.dtype)
-    gate = jax.nn.sigmoid(cm.dense(cfg, xn, p["wo_gate"]["w"]).astype(jnp.float32))
+    gate = jax.nn.sigmoid(cm.dense(cfg, xn, p["wo_gate"]["w"], site="wo_gate").astype(jnp.float32))
     y = (y.astype(jnp.float32) * gate).astype(x.dtype)
-    return x + cm.dense(cfg, y, p["wo"]["w"]).astype(x.dtype), new_state
+    return x + cm.dense(cfg, y, p["wo"]["w"], site="wo").astype(x.dtype), new_state
 
 
 # ---------------------------------------------------------------------------
@@ -138,9 +139,9 @@ def slstm_block(cfg: cm.ModelConfig, p: Params, x: Array,
                 state=None) -> Tuple[Array, Array]:
     b, s, d = x.shape
     xn = cm.rms_norm(x, p["ln"])
-    z = jnp.tanh(cm.dense(cfg, xn, p["wz"]["w"]).astype(jnp.float32))
-    i = jax.nn.sigmoid(cm.dense(cfg, xn, p["wi"]["w"]).astype(jnp.float32))
-    f = jax.nn.sigmoid(cm.dense(cfg, xn, p["wf"]["w"]).astype(jnp.float32) + 2.0)
+    z = jnp.tanh(cm.dense(cfg, xn, p["wz"]["w"], site="wz").astype(jnp.float32))
+    i = jax.nn.sigmoid(cm.dense(cfg, xn, p["wi"]["w"], site="wi").astype(jnp.float32))
+    f = jax.nn.sigmoid(cm.dense(cfg, xn, p["wf"]["w"], site="wf").astype(jnp.float32) + 2.0)
     if state is None:
         state = jnp.zeros((b, d), jnp.float32)
 
@@ -158,9 +159,9 @@ def slstm_block(cfg: cm.ModelConfig, p: Params, x: Array,
     a_cum, c_seq = jax.lax.associative_scan(compose, (a_seq, b_seq))
     c = c_seq.transpose(1, 0, 2)                     # (B, S, d)
     new_state = c_seq[-1]
-    o = jax.nn.sigmoid(cm.dense(cfg, xn, p["wo_gate"]["w"]).astype(jnp.float32))
+    o = jax.nn.sigmoid(cm.dense(cfg, xn, p["wo_gate"]["w"], site="wo_gate").astype(jnp.float32))
     y = (o * jnp.tanh(c)).astype(x.dtype)
-    return x + cm.dense(cfg, y, p["wo"]["w"]).astype(x.dtype), new_state
+    return x + cm.dense(cfg, y, p["wo"]["w"], site="wo").astype(x.dtype), new_state
 
 
 # ---------------------------------------------------------------------------
@@ -185,7 +186,11 @@ def forward(cfg: cm.ModelConfig, params: Params, tokens: Array) -> Array:
     x = cm.embed(cfg, params["embed"], tokens)
     for i, layer in enumerate(params["layers"]):
         block = mlstm_block if _kind(i) == "m" else slstm_block
-        fn = lambda xx, pp=layer, blk=block: blk(cfg, pp, xx)[0]
+        kind = "mlstm" if _kind(i) == "m" else "slstm"
+
+        def fn(xx, pp=layer, blk=block, scope=(f"layer.{i}", kind)):
+            with splan.site_scope(*scope):
+                return blk(cfg, pp, xx)[0]
         x = jax.checkpoint(fn)(x) if cfg.remat else fn(x)
     return x
 
@@ -213,7 +218,9 @@ def decode_step(cfg: cm.ModelConfig, params: Params, states, token: Array,
     new_states = []
     for i, (layer, st) in enumerate(zip(params["layers"], states)):
         block = mlstm_block if _kind(i) == "m" else slstm_block
-        x, ns = block(cfg, layer, x, state=st)
+        kind = "mlstm" if _kind(i) == "m" else "slstm"
+        with splan.site_scope(f"layer.{i}", kind):
+            x, ns = block(cfg, layer, x, state=st)
         new_states.append(ns)
     logits = cm.lm_logits(cfg, params["embed"], x)
     return logits, new_states

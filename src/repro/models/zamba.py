@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import common as cm
+from repro.nn import plan as splan
 
 Array = jnp.ndarray
 Params = Dict[str, Any]
@@ -114,7 +115,7 @@ def mamba_block(cfg: cm.ModelConfig, p: Params, x: Array, state=None,
     di, h, n = _d_inner(cfg), cfg.n_heads, cfg.ssm_state
     dh = di // h
     xn = cm.rms_norm(x, p["ln"])
-    proj = cm.dense(cfg, xn, p["in_proj"]["w"])
+    proj = cm.dense(cfg, xn, p["in_proj"]["w"], site="in_proj")
     xin, z, Bm, Cm, dt_raw = jnp.split(
         proj, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
     xin, new_conv = _causal_conv1d(xin, p["conv_w"], conv_state)
@@ -129,7 +130,9 @@ def mamba_block(cfg: cm.ModelConfig, p: Params, x: Array, state=None,
                               unroll=cfg.cost_unroll)
     y = y + xh.astype(jnp.float32) * p["d_skip"][None, None, :, None]
     y = (y.reshape(b, s, di) * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
-    return x + cm.dense(cfg, y, p["out_proj"]["w"]).astype(x.dtype), (new_state, new_conv)
+    return (x + cm.dense(cfg, y, p["out_proj"]["w"],
+                         site="out_proj").astype(x.dtype),
+            (new_state, new_conv))
 
 
 # ---------------------------------------------------------------------------
@@ -155,13 +158,16 @@ def forward(cfg: cm.ModelConfig, params: Params, tokens: Array) -> Array:
     positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
     shared_at = set(_shared_positions(cfg))
     for i, p in enumerate(params["mamba"]):
-        fn = lambda xx, pp=p: mamba_block(cfg, pp, xx)[0]
+        def fn(xx, pp=p, scope=(f"layer.{i}", "mamba")):
+            with splan.site_scope(*scope):
+                return mamba_block(cfg, pp, xx)[0]
         x = jax.checkpoint(fn)(x) if cfg.remat else fn(x)
         if i in shared_at:
             def shared_fn(xx):
-                y, _ = cm.attn_block(cfg, params["shared"]["attn"], xx,
-                                     positions=positions)
-                return cm.ffn_block(cfg, params["shared"]["ffn"], y)
+                with splan.site_scope("shared"):
+                    y, _ = cm.attn_block(cfg, params["shared"]["attn"], xx,
+                                         positions=positions)
+                    return cm.ffn_block(cfg, params["shared"]["ffn"], y)
             x = jax.checkpoint(shared_fn)(x) if cfg.remat else shared_fn(x)
     return x
 
@@ -200,14 +206,17 @@ def decode_step(cfg: cm.ModelConfig, params: Params, states, token: Array,
     kv_i = 0
     for i, p in enumerate(params["mamba"]):
         st, conv_st = states["mamba"][i]
-        x, (nst, ncv) = mamba_block(cfg, p, x, state=st, conv_state=conv_st)
+        with splan.site_scope(f"layer.{i}", "mamba"):
+            x, (nst, ncv) = mamba_block(cfg, p, x, state=st,
+                                        conv_state=conv_st)
         new_mamba.append((nst, ncv))
         if i in shared_at:
-            x, nkv = cm.attn_block(cfg, params["shared"]["attn"], x,
-                                   positions=positions,
-                                   kv_cache=states["shared_kv"][kv_i],
-                                   cache_len=cache_len)
-            x = cm.ffn_block(cfg, params["shared"]["ffn"], x)
+            with splan.site_scope("shared"):
+                x, nkv = cm.attn_block(cfg, params["shared"]["attn"], x,
+                                       positions=positions,
+                                       kv_cache=states["shared_kv"][kv_i],
+                                       cache_len=cache_len)
+                x = cm.ffn_block(cfg, params["shared"]["ffn"], x)
             new_kv.append(nkv)
             kv_i += 1
     logits = cm.lm_logits(cfg, params["embed"], x)

@@ -91,7 +91,7 @@ def _im2col(imgs: Array, kh: int, kw: int) -> Array:
 _CONV_DIMS = (((3,), (0,)), ((), ()))
 
 
-def _meter_fused(s, imgs: Array, kernel_arr: Array) -> None:
+def _meter_fused(s, imgs: Array, kernel_arr: Array, site=None) -> None:
     """Telemetry for the fused conv path, which bypasses ``dot_general``.
 
     Records the contraction the fused kernel performs — per pixel, one
@@ -108,16 +108,17 @@ def _meter_fused(s, imgs: Array, kernel_arr: Array) -> None:
         return
     b, h, w = imgs.shape
     kh, kw = kernel_arr.shape
-    meter.record_contraction(s.meta, b, h * w, kh * kw, 1)
+    meter.record_contraction(s.meta, b, h * w, kh * kw, 1, site=site)
     if meter.error_probe and s.meta.mult_name != "exact":
         slab = _im2col(imgs[:1, :8], kh, kw)  # (1, ≤8, W, taps)
         meter.probe(s.meta, s.scalar, slab.reshape(1, -1, kh * kw),
-                    kernel_arr.reshape(1, kh * kw, 1))
+                    kernel_arr.reshape(1, kh * kw, 1), site=site)
 
 
 def conv2d_batched(imgs: Array, kernel: Array,
                    substrate: "str | object" = "approx_bitexact",
-                   partitioning=None, fused: "bool | None" = None) -> Array:
+                   partitioning=None, fused: "bool | None" = None,
+                   site=None) -> Array:
     """Batched 'same' integer convolution via im2col + substrate contraction.
 
     imgs: (B, H, W) or NHWC (B, H, W, C) int32 in [-128, 127] (channels are
@@ -130,6 +131,9 @@ def conv2d_batched(imgs: Array, kernel: Array,
     :class:`repro.nn.substrate.Partitioning` — shards the contraction
     through shard_map (bit-identical for bit-exact substrates). Returns
     int32 of imgs' shape.
+
+    ``site`` optionally names the contraction site for per-site telemetry
+    attribution (see :mod:`repro.nn.plan`); it never affects values.
 
     ``fused`` selects the substrate's fused conv kernel (in-kernel im2col,
     no host-side patch tensor — ``kernels/fused_conv``): ``None`` (default)
@@ -169,11 +173,12 @@ def conv2d_batched(imgs: Array, kernel: Array,
             raise ValueError(
                 "fused=True is incompatible with partitioning — the fused "
                 "kernel contracts K in full inside one device kernel")
-        _meter_fused(s, imgs, kernel_arr)
+        _meter_fused(s, imgs, kernel_arr, site=site)
         out = s.fused_conv2d(imgs, kernel)
     else:
         patches = _im2col(imgs, kh, kw)  # (B, H, W, kh·kw)
-        spec = sub.ContractionSpec(_CONV_DIMS, partitioning=partitioning)
+        spec = sub.ContractionSpec(_CONV_DIMS, partitioning=partitioning,
+                                   site=site)
         out = s.dot_general(patches, kernel_arr.reshape(kh * kw, 1),
                             spec)[..., 0]
     if nhwc:
@@ -215,8 +220,66 @@ def edge_detect_batched(imgs_u8: Array,
     n = getattr(s.meta, "width", 8)
     px = to_signed_pixels(imgs_u8, n)
     raw = conv2d_batched(px, jnp.asarray(LAPLACIAN), s,
-                         partitioning=partitioning)
+                         partitioning=partitioning, site=EDGE_SITE)
     return jnp.clip(_rescale_raw(raw, n), 0, 255).astype(jnp.uint8)
+
+
+# ---------------------------------------------------------------------------
+# planned (multi-site) edge detection
+# ---------------------------------------------------------------------------
+
+#: site name of the uniform whole-kernel edge contraction
+EDGE_SITE = "conv.edge"
+
+#: the planned path's tap groups: each is a *split* of the 3×3 Laplacian —
+#: (site leaf, flat tap indices into the row-major kernel). The center tap
+#: (coefficient 8) dominates the response; the ring taps (all −1) are the
+#: smoothing term and tolerate cheaper substrates.
+_EDGE_TAP_GROUPS = (("center", (4,)), ("ring", (0, 1, 2, 3, 5, 6, 7, 8)))
+
+
+def edge_tap_sites() -> tuple:
+    """The planned edge workload's site names (``conv.edge.<group>``)."""
+    return tuple(f"{EDGE_SITE}.{name}" for name, _ in _EDGE_TAP_GROUPS)
+
+
+def edge_detect_planned(imgs_u8: Array, plan, partitioning=None) -> Array:
+    """Laplacian edge maps under a per-site :class:`~repro.nn.plan.SubstratePlan`.
+
+    The 3×3 conv splits into tap groups — ``conv.edge.center`` (the ×8
+    tap) and ``conv.edge.ring`` (the eight −1 taps) — each contracted on
+    the substrate the plan assigns to its site, then summed in the exact
+    int32 adder. Because every substrate corrects its f(0,0) k-padding
+    compensation internally, the group responses add up *bit-identically*
+    to the single whole-kernel contraction whenever both groups share one
+    substrate — so a uniform plan reproduces
+    :func:`edge_detect_batched` exactly (asserted in tests), and the
+    serving bit-identity contract (zero-pad + row-independence) carries
+    over unchanged to mixed plans.
+
+    Per-group widths ≤ 8 rescale by *left* shifts, which distribute over
+    the exact adder — mixing widths above 8 would make the final
+    right-shift non-distributive, so the autotuner searches widths ≤ 8.
+    """
+    from repro.nn import plan as plan_mod
+    from repro.nn import substrate as sub
+
+    plan = plan_mod.as_plan(plan)
+    lap = LAPLACIAN.reshape(-1)
+    total = None
+    for name, taps in _EDGE_TAP_GROUPS:
+        site = f"{EDGE_SITE}.{name}"
+        s = sub.get_substrate(plan.resolve(site))
+        n = getattr(s.meta, "width", 8)
+        px = to_signed_pixels(imgs_u8, n)
+        patches = _im2col(px, 3, 3)[..., list(taps)]
+        coeffs = jnp.asarray(lap[list(taps)].reshape(len(taps), 1))
+        spec = sub.ContractionSpec(_CONV_DIMS, partitioning=partitioning,
+                                   site=site)
+        raw = s.dot_general(patches, coeffs, spec)[..., 0]
+        r = _rescale_raw(raw, n)
+        total = r if total is None else total + r
+    return jnp.clip(total, 0, 255).astype(jnp.uint8)
 
 
 def psnr(ref: Array, test: Array, peak: float = 255.0) -> float:

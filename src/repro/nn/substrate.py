@@ -312,18 +312,23 @@ class ContractionSpec:
                        through the quantization boundary.
     partitioning:      None → single-device contraction; a
                        :class:`Partitioning` → lowered through shard_map.
+    site:              optional contraction-site name (``"layer.3.attn.wq"``,
+                       ``"conv.edge.center"`` — see :mod:`repro.nn.plan`);
+                       purely observational: the telemetry meter attributes
+                       MAC/energy counts to it instead of the shape label.
     """
 
     dimension_numbers: DimensionNumbers = MATMUL_DIMS
     quant: Optional[QuantPolicy] = None
     partitioning: Optional[Partitioning] = None
+    site: Optional[str] = None
 
     @staticmethod
     def matmul(quant: Optional[QuantPolicy] = None,
-               partitioning: Optional[Partitioning] = None
-               ) -> "ContractionSpec":
+               partitioning: Optional[Partitioning] = None,
+               site: Optional[str] = None) -> "ContractionSpec":
         """Plain ``(…, K) @ (K, N)`` spec (the historical ``dot`` shape)."""
-        return ContractionSpec(MATMUL_DIMS, quant, partitioning)
+        return ContractionSpec(MATMUL_DIMS, quant, partitioning, site)
 
 
 # -- ambient partitioning (opt-in mesh lowering for deep call sites) --------
@@ -617,22 +622,25 @@ class _SubstrateBase:
     # -- telemetry -----------------------------------------------------------
 
     def _meter_hook(self, plan: "_Plan", a3: Optional[Array],
-                    b3: Optional[Array]) -> None:
+                    b3: Optional[Array],
+                    site: Optional[str] = None) -> None:
         """Record this contraction on the ambient telemetry meter, if any.
 
         One global read when no :func:`repro.obs.meter.telemetry_scope`
         is active — the metered path is purely additive (counts / MACs /
         estimated energy, plus the opt-in error probe on integer
-        operands), so outputs are bit-identical either way.
+        operands), so outputs are bit-identical either way. ``site`` (from
+        ``spec.site``) names the contraction site for per-site attribution.
         """
         meter = _current_meter()
         if meter is None:
             return
-        meter.record_contraction(self.meta, plan.b, plan.m, plan.k, plan.n)
+        meter.record_contraction(self.meta, plan.b, plan.m, plan.k, plan.n,
+                                 site=site)
         if (meter.error_probe and a3 is not None
                 and self.meta.mult_name != "exact"
                 and jnp.issubdtype(a3.dtype, jnp.integer)):
-            meter.probe(self.meta, self.scalar, a3, b3)
+            meter.probe(self.meta, self.scalar, a3, b3, site=site)
 
     # -- the contraction surface ---------------------------------------------
 
@@ -658,7 +666,7 @@ class _SubstrateBase:
                     f"integer operands, got {x.dtype}/{w.dtype}; pass a "
                     "QuantPolicy to contract float tensors")
             a3, b3 = plan.lhs3(x), plan.rhs3(w)
-            self._meter_hook(plan, a3, b3)
+            self._meter_hook(plan, a3, b3, site=spec.site)
             out3 = self._contract3(a3, b3, spec.partitioning)
             return plan.unflatten(out3)
         q = spec.quant
@@ -672,7 +680,7 @@ class _SubstrateBase:
                                    contract_axis=2, bits=bits, eps=q.eps)
         qb, sb = _quantize_operand(plan.rhs3(w), q.w_mode, q.w_scale,
                                    contract_axis=1, bits=bits, eps=q.eps)
-        self._meter_hook(plan, qa, qb)
+        self._meter_hook(plan, qa, qb, site=spec.site)
         out3 = self._contract3(qa, qb, spec.partitioning)
         out3 = out3.astype(jnp.float32) * (sa * sb)
         return plan.unflatten(out3).astype(x.dtype)
@@ -788,7 +796,7 @@ class ExactSubstrate(_SubstrateBase):
             # contract in the compute dtype (the historical `dot`)
             w = jnp.asarray(w, x.dtype)
             plan = _plan_contraction(x.shape, w.shape, spec.dimension_numbers)
-            self._meter_hook(plan, None, None)  # float path: no probe
+            self._meter_hook(plan, None, None, site=spec.site)  # no probe
             if spec.partitioning is None:
                 return jax.lax.dot_general(x, w, plan.dims)
             if plan.b != 1:

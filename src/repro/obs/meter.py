@@ -159,20 +159,24 @@ class ContractionMeter:
 
     # -- substrate hooks (called from dot_general / conv at trace time) ------
 
-    def record_contraction(self, meta, b: int, m: int, k: int, n: int) -> None:
+    def record_contraction(self, meta, b: int, m: int, k: int, n: int,
+                           site: Optional[str] = None) -> None:
         """Meter one ``(B,M,K)@(B,K,N)`` contraction under ``meta``.
 
         Static facts (spec, shape, MAC count, PDP price) are computed
         here, at trace time; the registry write happens at *execution*
         time through ``jax.debug.callback``, against whatever meter is
-        ambient then.
+        ambient then. ``site`` names the contraction site (a
+        :mod:`repro.nn.plan` name like ``"layer.3.attn.wq"``); anonymous
+        contractions fall back to the shape label.
         """
-        site = f"{b}x{m}x{k}x{n}"
+        site = site or f"{b}x{m}x{k}x{n}"
         macs = int(b) * int(m) * int(k) * int(n)
         payload = (meta.spec, site, macs, pdp_per_mac_fj(meta.mult_key))
         jax.debug.callback(functools.partial(_record_cb, payload))
 
-    def probe(self, meta, scalar_fn, a3, b3) -> None:
+    def probe(self, meta, scalar_fn, a3, b3,
+              site: Optional[str] = None) -> None:
         """Re-run a sampled slab per-product against the exact multiplier.
 
         a3/b3: the normalized integer operands ``(B, M, K)`` / ``(B, K, N)``
@@ -200,7 +204,7 @@ class ContractionMeter:
                              jnp.int32)
         exact = a_s[:, :, None] * b_s[None, :, :]
         err = approx - exact
-        site = f"{a3.shape[0]}x{m}x{k}x{ncols}"
+        site = site or f"{a3.shape[0]}x{m}x{k}x{ncols}"
         jax.debug.callback(
             functools.partial(_probe_cb, meta.spec, site,
                               int(rows) * int(kk) * int(cols)),
@@ -221,6 +225,34 @@ class ContractionMeter:
             out[labels["spec"]]["macs"] += int(value)
         for labels, value in self._energy.samples():
             out[labels["spec"]]["energy_pdp_fj"] += float(value)
+        return out
+
+    def site_summary(self) -> dict:
+        """Per-site rollup: contractions, MACs, energy (fJ), specs seen.
+
+        Keys are the site labels recorded at each contraction — plan site
+        names where the call site passed one (``spec.site`` /
+        ``conv.edge_detect_*``), shape strings for anonymous contractions.
+        A site served by several substrates (e.g. across telemetry runs)
+        lists every spec and sums their energy.
+        """
+        out: dict = {}
+
+        def entry(site):
+            return out.setdefault(site, {"contractions": 0, "macs": 0,
+                                         "energy_pdp_fj": 0.0, "specs": []})
+
+        for labels, value in self._contractions.samples():
+            e = entry(labels["site"])
+            e["contractions"] += int(value)
+            if labels["spec"] not in e["specs"]:
+                e["specs"].append(labels["spec"])
+        for labels, value in self._macs.samples():
+            entry(labels["site"])["macs"] += int(value)
+        for labels, value in self._energy.samples():
+            entry(labels["site"])["energy_pdp_fj"] += float(value)
+        for e in out.values():
+            e["specs"] = sorted(e["specs"])
         return out
 
     def probe_moments(self, spec: Optional[str] = None) -> dict:

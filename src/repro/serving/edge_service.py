@@ -57,9 +57,15 @@ def _ceil_to(x: int, mult: int) -> int:
 
 
 class EdgeDetectService:
-    """Micro-batched Laplacian edge detection on one product substrate.
+    """Micro-batched Laplacian edge detection on one product substrate
+    (or a per-tap-group :class:`repro.nn.plan.SubstratePlan`).
 
-    substrate:          spec string or ProductSubstrate instance.
+    substrate:          spec string, ProductSubstrate instance, or a
+                        :class:`~repro.nn.plan.SubstratePlan` (or its dict
+                        schema) assigning specs to the edge tap-group sites
+                        ``conv.edge.center`` / ``conv.edge.ring`` — plans
+                        serve through :func:`repro.nn.conv.edge_detect_planned`
+                        (uniform plans ≡ the direct path bit-identically).
     max_batch_size:     flush a shape bucket at this many images.
     max_wait_s:         flush a partial bucket once its oldest image has
                         waited this long.
@@ -99,8 +105,15 @@ class EdgeDetectService:
         if device_latency_s < 0:
             raise ValueError(
                 f"device_latency_s must be >= 0, got {device_latency_s}")
-        self.substrate = sub.as_substrate(substrate)
-        self.spec = self.substrate.meta.spec
+        from repro.nn import plan as plan_mod
+        if isinstance(substrate, (plan_mod.SubstratePlan, dict)):
+            self.plan = plan_mod.as_plan(substrate)
+            self.substrate = sub.get_substrate(self.plan.default)
+            self.spec = self.plan.label
+        else:
+            self.plan = None
+            self.substrate = sub.as_substrate(substrate)
+            self.spec = self.substrate.meta.spec
         self.bucket_granularity = bucket_granularity
         self.pad_batches = pad_batches
         self.device_latency_s = device_latency_s
@@ -137,8 +150,12 @@ class EdgeDetectService:
         stage that holds the result on the emulated device for that long.
         The callback returns its input untouched, so emulation never
         perturbs served values — only their timing."""
-        out = conv.edge_detect_batched(
-            batch, self.substrate, partitioning=self.partitioning)
+        if self.plan is not None:
+            out = conv.edge_detect_planned(
+                batch, self.plan, partitioning=self.partitioning)
+        else:
+            out = conv.edge_detect_batched(
+                batch, self.substrate, partitioning=self.partitioning)
         if self.device_latency_s > 0:
             out = jax.pure_callback(
                 self._emulate_device,

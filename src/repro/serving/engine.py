@@ -25,9 +25,10 @@ For the large-scale path, the *dry-run* lowers the dedicated ``prefill``
 graph (chunked attention, full-sequence); this engine is the functional
 small-scale server used by the examples and tests.
 
-The engine accepts a ``substrate`` override (a ``repro.nn.substrate`` spec)
-so int8 / approximate-multiplier serving experiments run against the same
-bundle + params without touching the model registry.
+The engine accepts a ``substrate`` override — a ``repro.nn.substrate`` spec
+or a per-site :class:`repro.nn.plan.SubstratePlan` — so int8 / approximate /
+mixed-substrate serving experiments run against the same bundle + params
+without touching the model registry.
 """
 from __future__ import annotations
 
@@ -60,20 +61,28 @@ class ServingEngine:
     def __init__(self, bundle, params, batch_size: int = 4,
                  max_len: int = 256, seed: int = 0, substrate=None,
                  metrics: Optional[ServingMetrics] = None):
-        """substrate: optional ProductSubstrate spec string (e.g. ``"int8"``,
-        ``"approx_lut:design_du2022"``) or instance overriding the bundle's
-        ``cfg.dot_mode`` — the bundle is rebuilt on the overridden config so
-        int8/approx serving experiments don't need a separate registry entry.
-        Parameters are layout-compatible across substrates (the quantization
-        boundary is dynamic), so the same ``params`` tree is served.
+        """substrate: optional override for the bundle's substrate
+        assignment — a ProductSubstrate spec string (e.g. ``"int8"``,
+        ``"approx_lut:design_du2022"``), a ProductSubstrate instance, or a
+        :class:`repro.nn.plan.SubstratePlan` (or its dict/JSON schema) for
+        per-site mixed-substrate serving. The bundle is rebuilt on the
+        overridden config (``cfg.dot_plan``), so int8/approx/mixed serving
+        experiments don't need a separate registry entry. Parameters are
+        layout-compatible across substrates (the quantization boundary is
+        dynamic), so the same ``params`` tree is served.
         metrics: optional shared :class:`ServingMetrics` (e.g. one backed by
         a shared registry for a combined export); a private one otherwise."""
         if substrate is not None:
             from repro.models import registry as reg
+            from repro.nn import plan as plan_mod
             from repro.nn import substrate as psub
 
-            if isinstance(substrate, str):
+            spec = None
+            if isinstance(substrate, (plan_mod.SubstratePlan, dict)):
+                plan = plan_mod.as_plan(substrate)
+            elif isinstance(substrate, str):
                 spec = substrate
+                plan = plan_mod.SubstratePlan.uniform(substrate)
             else:
                 # the model path resolves by spec string (cfg.dot_mode), so a
                 # substrate instance must be equivalent to what the registry
@@ -87,8 +96,14 @@ class ServingEngine:
                         f"substrate instance {substrate!r} does not match the "
                         f"registered backend for {spec!r}; pass a spec string "
                         "or register the backend first")
+                plan = plan_mod.SubstratePlan.uniform(spec)
+            # uniform overrides mirror the spec into cfg.dot_mode too, so
+            # introspection (and pre-plan callers) keep seeing the spec
+            over = {"dot_plan": plan}
+            if spec is not None:
+                over["dot_mode"] = spec
             bundle = reg.build_bundle(
-                dataclasses.replace(bundle.cfg, dot_mode=spec))
+                dataclasses.replace(bundle.cfg, **over))
         self.bundle = bundle
         self.cfg = bundle.cfg
         self.params = params
