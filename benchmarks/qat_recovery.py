@@ -1,0 +1,238 @@
+"""Recovered-quality benchmark for approximation-aware training (QAT).
+
+For a grid of wirings × operand widths, measures quality on the two paper
+workloads **before** and **after** a short QAT fine-tune under that wiring's
+own error (:mod:`repro.train.qat`):
+
+* **edge** — PSNR of the planned Laplacian edge maps vs the exact
+  multiplier (paper Fig. 9 metric). Pre = the untrained integer pipeline
+  (`edge_detect_planned`), post = the QAT edge model after
+  :func:`repro.train.qat.finetune_edge`.
+* **lm** — eval loss of a reduced LM on a fixed synthetic batch, running
+  its denses on the approximate substrate. Pre = exact-pretrained params
+  evaluated on the approximate forward, post = after a short QAT
+  fine-tune (stat forward for speed; eval is always bit-exact).
+
+Each row carries the wiring's per-MAC PDP (unit-gate model, Table 5
+pricing) and the workload's metered plan energy, so the headline
+``recovered_points`` can be read directly: operating points *cheaper* than
+uniform ``proposed@8`` whose post-QAT edge PSNR matches or beats the
+uniform ``proposed@8`` pipeline *without* QAT — approximate training
+buying back the quality that a cheaper multiplier gives up.
+
+Writes ``BENCH_qat.json`` at the repo root. Standalone:
+``python -m benchmarks.qat_recovery [--dry-run] [--json PATH]``.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from repro.data import image_batch
+from repro.launch import autotune
+from repro.nn import conv
+from repro.nn import plan as plan_mod
+from repro.obs.meter import pdp_per_mac_fj
+from repro.train import qat
+
+_REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+DEFAULT_JSON = _REPO_ROOT / "BENCH_qat.json"
+
+REFERENCE = ("proposed", 8)                # the paper's headline multiplier
+WIRINGS = ("proposed", "design_du2022", "design_strollo2020")
+WIDTHS = (6, 8)
+
+# reduced LM (same shape as the launcher smoke runs)
+LM_ARCH = "minitron-8b"
+LM_OVERRIDES = dict(n_layers=2, d_model=64, d_ff=128, vocab=128,
+                    n_heads=4, n_kv_heads=2)
+
+
+def _spec(wiring: str, width: int) -> str:
+    return f"approx_bitexact:{wiring}@{width}"
+
+
+def _mac_fj(spec: str) -> float:
+    from repro.nn import substrate as psub
+
+    return pdp_per_mac_fj(psub.get_substrate(spec).meta.mult_key)
+
+
+def _edge_rows(imgs, *, steps: int, lr: float = 0.05):
+    """One row per wiring×width: pre/post PSNR + energy figures."""
+    rows = []
+    for wiring in WIRINGS:
+        for width in WIDTHS:
+            plan = plan_mod.SubstratePlan.uniform(_spec(wiring, width))
+            site_macs = autotune.measure_site_macs(
+                lambda p: np.asarray(conv.edge_detect_planned(imgs, p)), plan)
+            t0 = time.perf_counter()
+            fin = qat.finetune_edge(imgs, plan, steps=steps, lr=lr)
+            us = (time.perf_counter() - t0) * 1e6
+            rows.append({
+                "wiring": wiring, "width": width,
+                "spec": _spec(wiring, width),
+                "psnr_pre_db": fin["psnr_pre"],
+                "psnr_post_db": fin["psnr_post"],
+                "pdp_per_mac_fj": _mac_fj(_spec(wiring, width)),
+                "plan_pdp_fj": autotune.plan_pdp_fj(site_macs, plan),
+                "qat_steps": steps, "finetune_us": us,
+            })
+    return rows
+
+
+def _lm_rows(*, pretrain_steps: int, qat_steps: int, widths=(6, 8),
+             wirings=("proposed",)):
+    """Reduced-LM eval loss on the approximate substrate, pre vs post QAT."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.data import SyntheticLMStream
+    from repro.models import registry as reg
+    from repro.optim import adamw
+
+    opt = adamw()
+    stream = SyntheticLMStream(vocab=LM_OVERRIDES["vocab"], batch=4,
+                               seq_len=32, seed=0)
+
+    # exact pretrain → the params every wiring starts its recovery from
+    exact_bundle = reg.get_bundle(LM_ARCH, dot_plan="exact", **LM_OVERRIDES)
+    params = exact_bundle.init_params(jax.random.PRNGKey(0))
+    state = opt.init(params)
+    step_exact = jax.jit(lambda p, s, b: _sgd_step(exact_bundle.loss_fn,
+                                                   opt, p, s, b))
+    stream.seek(0)
+    for _ in range(pretrain_steps):
+        batch = {k: jnp.asarray(v) for k, v in stream.next().items()}
+        _, params, state = step_exact(params, state, batch)
+    eval_batch = {k: jnp.asarray(v) for k, v in stream.next().items()}
+    exact_loss = float(exact_bundle.loss_fn(params, eval_batch))
+
+    rows = []
+    for wiring in wirings:
+        for width in widths:
+            spec = _spec(wiring, width)
+            plan = plan_mod.SubstratePlan.uniform(spec)
+            bundle = reg.get_bundle(LM_ARCH, dot_plan=plan, **LM_OVERRIDES)
+            pre = float(bundle.loss_fn(params, eval_batch))
+
+            policy = qat.QATPolicy(forward="stat")
+
+            def qat_loss(p, b, _f=bundle.loss_fn, _pol=policy):
+                with qat.qat_scope(_pol):
+                    return _f(p, b)
+
+            p2, s2 = params, opt.init(params)
+            step_qat = jax.jit(lambda p, s, b: _sgd_step(qat_loss, opt,
+                                                         p, s, b))
+            stream.seek(pretrain_steps + 1)
+            for _ in range(qat_steps):
+                batch = {k: jnp.asarray(v) for k, v in stream.next().items()}
+                _, p2, s2 = step_qat(p2, s2, batch)
+            post = float(bundle.loss_fn(p2, eval_batch))
+            rows.append({
+                "wiring": wiring, "width": width, "spec": spec,
+                "loss_exact": exact_loss, "loss_pre": pre, "loss_post": post,
+                "pdp_per_mac_fj": _mac_fj(spec),
+                "pretrain_steps": pretrain_steps, "qat_steps": qat_steps,
+            })
+    return rows
+
+
+def _sgd_step(loss_fn, opt, params, state, batch):
+    import jax
+
+    loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+    new_params, new_state = opt.update(grads, state, params, lr=1e-3)
+    return loss, new_params, new_state
+
+
+def _recovered_points(edge_rows):
+    """Cheaper-than-reference rows whose *post*-QAT PSNR ≥ reference *pre*."""
+    ref = next(r for r in edge_rows
+               if (r["wiring"], r["width"]) == REFERENCE)
+    return [
+        {"spec": r["spec"], "pdp_per_mac_fj": r["pdp_per_mac_fj"],
+         "psnr_post_db": r["psnr_post_db"],
+         "reference_spec": ref["spec"],
+         "reference_pdp_per_mac_fj": ref["pdp_per_mac_fj"],
+         "reference_psnr_pre_db": ref["psnr_pre_db"],
+         "energy_saved_frac": 1 - r["pdp_per_mac_fj"] / ref["pdp_per_mac_fj"]}
+        for r in edge_rows
+        if r["pdp_per_mac_fj"] < ref["pdp_per_mac_fj"]
+        and r["psnr_post_db"] >= ref["psnr_pre_db"]
+    ]
+
+
+def run(dry_run: bool = False, json_path=DEFAULT_JSON) -> list:
+    """Harness entry point; returns ``(name, us, derived)`` CSV rows."""
+    if dry_run:
+        imgs = image_batch(2, 24, 24)
+        edge = _edge_rows(imgs, steps=4)
+        lm = _lm_rows(pretrain_steps=3, qat_steps=3, widths=(8,))
+        json_path = None
+    else:
+        imgs = image_batch(4, 48, 48)
+        edge = _edge_rows(imgs, steps=120)
+        lm = _lm_rows(pretrain_steps=40, qat_steps=25)
+
+    print(f"\n== QAT recovery (edge: {imgs.shape[0]}x{imgs.shape[1]}"
+          f"x{imgs.shape[2]}) ==")
+    print(f"{'spec':>34s} {'pre_db':>7s} {'post_db':>8s} {'fJ/MAC':>8s}")
+    for r in edge:
+        print(f"{r['spec']:>34s} {r['psnr_pre_db']:7.2f} "
+              f"{r['psnr_post_db']:8.2f} {r['pdp_per_mac_fj']:8.1f}")
+    print(f"{'lm spec':>34s} {'pre':>7s} {'post':>8s} {'exact':>8s}")
+    for r in lm:
+        print(f"{r['spec']:>34s} {r['loss_pre']:7.3f} "
+              f"{r['loss_post']:8.3f} {r['loss_exact']:8.3f}")
+
+    recovered = _recovered_points(edge)
+    for p in recovered:
+        print(f"[qat] recovered point: {p['spec']} "
+              f"({p['pdp_per_mac_fj']:.1f} fJ/MAC, "
+              f"{100 * p['energy_saved_frac']:.0f}% cheaper) post-QAT "
+              f"{p['psnr_post_db']:.2f} dB >= {p['reference_spec']} pre-QAT "
+              f"{p['reference_psnr_pre_db']:.2f} dB")
+    if not dry_run and not recovered:
+        raise AssertionError(
+            "no recovered operating point: QAT failed to match the "
+            "reference quality at any cheaper wiring/width")
+
+    rows = []
+    for r in edge:
+        rows.append((f"qat/edge/{r['wiring']}@{r['width']}",
+                     r["finetune_us"],
+                     f"pre={r['psnr_pre_db']:.2f}dB,"
+                     f"post={r['psnr_post_db']:.2f}dB"))
+    for r in lm:
+        rows.append((f"qat/lm/{r['wiring']}@{r['width']}", 0.0,
+                     f"pre={r['loss_pre']:.3f},post={r['loss_post']:.3f}"))
+
+    if json_path:
+        payload = {
+            "reference": _spec(*REFERENCE),
+            "wirings": list(WIRINGS), "widths": list(WIDTHS),
+            "edge": edge, "lm": lm,
+            "recovered_points": recovered,
+            "lm_arch": LM_ARCH, "lm_overrides": LM_OVERRIDES,
+        }
+        pathlib.Path(json_path).write_text(
+            json.dumps(payload, indent=1) + "\n")
+        print(f"[bench qat] wrote {json_path}")
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dry-run", action="store_true",
+                    help="tiny grid + steps, no JSON artifact (CI smoke)")
+    ap.add_argument("--json", default=str(DEFAULT_JSON), dest="json_path")
+    args = ap.parse_args()
+    run(dry_run=args.dry_run,
+        json_path=None if args.dry_run else args.json_path)

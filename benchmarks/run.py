@@ -13,8 +13,10 @@ Machine-readable artifacts: the ``kernel`` bench writes
 ``BENCH_serving.json`` (throughput/latency records + the substrate-meter
 energy rollup), and the ``autotune`` bench writes ``BENCH_autotune.json``
 (plan-vs-uniform PDP/PSNR table; ``--plan`` evaluates a saved plan/bundle
-instead of searching) at the repo root, so one ``python -m benchmarks.run``
-produces the full perf trajectory. Trace files are opt-in via each bench's
+instead of searching), and the ``qat`` bench writes ``BENCH_qat.json``
+(pre/post-QAT quality across wirings × widths + recovered operating
+points) at the repo root, so one ``python -m benchmarks.run`` produces the
+full perf trajectory. Trace files are opt-in via each bench's
 standalone ``--trace`` flag.
 """
 from __future__ import annotations
@@ -29,6 +31,7 @@ from benchmarks import (
     fig9_edge,
     fig10_tradeoff,
     kernelbench,
+    qat_recovery,
     table2_compressors,
     table3_compressor4,
     table4_errors,
@@ -45,6 +48,7 @@ MODULES = {
     "kernel": kernelbench,
     "serve_edge": edge_serving,
     "autotune": autotune_plan,
+    "qat": qat_recovery,
 }
 
 

@@ -43,23 +43,10 @@ from repro.nn import plan as plan_mod
 from repro.nn import substrate as psub
 from repro.obs.meter import ContractionMeter, pdp_per_mac_fj, telemetry_scope
 
-# backends with an approx_stat statistical counterpart (same wiring + width)
-_STAT_REWRITABLE = ("approx_bitexact", "approx_lut", "approx_pallas")
-
-
-def stat_spec(spec: str) -> str:
-    """The fast-scoring counterpart of a spec: same wiring/width, stat model."""
-    parts = psub.parse_spec(spec)
-    if parts.backend in _STAT_REWRITABLE:
-        return f"approx_stat:{parts.mult_name}@{parts.width}"
-    return spec
-
-
-def stat_plan(plan: plan_mod.SubstratePlan) -> plan_mod.SubstratePlan:
-    """Rewrite every assignment to its ``approx_stat`` scoring counterpart."""
-    return plan_mod.SubstratePlan(
-        default=stat_spec(plan.default),
-        rules=tuple((p, stat_spec(s)) for p, s in plan.rules))
+# fast statistical scoring counterparts — canonical home is nn.plan (the
+# QAT layer shares them); re-exported here for existing callers
+stat_spec = plan_mod.stat_spec
+stat_plan = plan_mod.stat_plan
 
 
 def with_rule(plan: plan_mod.SubstratePlan, pattern: str,
@@ -176,7 +163,8 @@ def autotune_edge(images: Optional[np.ndarray] = None, *,
                   baseline: str = "approx_bitexact:proposed@8",
                   psnr_floor: Optional[float] = None,
                   n_images: int = 6, size: Tuple[int, int] = (64, 64),
-                  seed: int = 0, verbose: bool = False) -> dict:
+                  seed: int = 0, verbose: bool = False,
+                  qat_steps: int = 0, qat_lr: float = 0.05) -> dict:
     """Tune per-tap-group substrates for the edge-detection workload.
 
     Quality metric: PSNR of the planned edge maps against the exact
@@ -187,6 +175,15 @@ def autotune_edge(images: Optional[np.ndarray] = None, *,
     *validated* no worse on the bit-exact backends. Widths are capped at 8:
     the planned tap-group sum is only distributive for left-shift rescales
     (see :func:`repro.nn.conv.edge_detect_planned`).
+
+    ``qat_steps > 0`` makes the search *approximation-aware*: every
+    candidate plan (and the final validation) is scored on the PSNR after a
+    ``qat_steps``-step :func:`repro.train.qat.finetune_edge` recovery under
+    that plan's wirings, so greedy accepts moves whose error the model can
+    train away — cheaper plans become reachable that raw scoring rejects.
+    QAT widths are floored at 5 (the quantizer-clip contract of
+    :func:`repro.train.qat.edge_response`); the adapted edge params ride
+    along in the result (and hence the saved bundle).
 
     Returns a result dict (see the CLI) with the winning plan under
     ``"plan"``.
@@ -208,12 +205,28 @@ def autotune_edge(images: Optional[np.ndarray] = None, *,
     site_macs = measure_site_macs(
         lambda p: np.asarray(conv.edge_detect_planned(images, p)), base_plan)
 
+    if qat_steps and min(widths) < 5:
+        raise ValueError(
+            f"qat_steps > 0 needs widths >= 5, got {tuple(widths)}")
+
+    def _finetuned(plan):
+        from repro.train import qat as qat_mod
+        return qat_mod.finetune_edge(images, plan, steps=qat_steps,
+                                     lr=qat_lr)
+
     def evaluate(plan):
-        score = conv.psnr(ref,
-                          conv.edge_detect_planned(images, stat_plan(plan)))
+        if qat_steps:
+            # adapted quality: PSNR after a short QAT recovery on the fast
+            # stat counterpart of the candidate's wirings
+            score = _finetuned(stat_plan(plan))["psnr_post"]
+        else:
+            score = conv.psnr(
+                ref, conv.edge_detect_planned(images, stat_plan(plan)))
         return plan_pdp_fj(site_macs, plan), score
 
     def exact_psnr(plan):
+        if qat_steps:
+            return _finetuned(plan)["psnr_post"]
         return conv.psnr(ref, conv.edge_detect_planned(images, plan))
 
     budget = (evaluate(base_plan)[1] if psnr_floor is None
@@ -232,7 +245,7 @@ def autotune_edge(images: Optional[np.ndarray] = None, *,
 
     tuned, tuned_pdp, tuned_psnr, rolled_back = _validate_with_rollback(
         history, validate, log=log)
-    return {
+    res = {
         "workload": "edge",
         "sites": list(sites),
         "site_macs": site_macs,
@@ -246,6 +259,13 @@ def autotune_edge(images: Optional[np.ndarray] = None, *,
         "rolled_back": rolled_back,
         "plan": tuned,
     }
+    if qat_steps:
+        fin = _finetuned(tuned)
+        res["qat"] = {"steps": int(qat_steps), "lr": float(qat_lr),
+                      "psnr_pre": fin["psnr_pre"],
+                      "psnr_post": fin["psnr_post"]}
+        res["params"] = fin["params"]  # adapted edge params → bundle
+    return res
 
 
 # ---------------------------------------------------------------------------
@@ -375,6 +395,12 @@ def main(argv: Optional[Sequence[str]] = None):
     ap.add_argument("--psnr-floor", type=float, default=None,
                     help="explicit PSNR budget in dB (edge; default: match "
                          "the baseline plan's own PSNR)")
+    ap.add_argument("--qat-steps", type=int, default=0,
+                    help="approximation-aware search: score each candidate "
+                         "plan after this many QAT fine-tune steps (edge; "
+                         "0 = raw scoring)")
+    ap.add_argument("--qat-lr", type=float, default=0.05,
+                    help="learning rate for --qat-steps fine-tuning (edge)")
     # lm knobs
     ap.add_argument("--arch", default=None, help="registry arch id (lm)")
     ap.add_argument("--candidates", default="int8,approx_bitexact:proposed@8",
@@ -394,8 +420,13 @@ def main(argv: Optional[Sequence[str]] = None):
             widths=tuple(int(v) for v in args.widths.split(",")),
             baseline=args.baseline or "approx_bitexact:proposed@8",
             psnr_floor=args.psnr_floor, n_images=args.images, size=(h, w),
-            seed=args.seed, verbose=True)
+            seed=args.seed, verbose=True,
+            qat_steps=args.qat_steps, qat_lr=args.qat_lr)
         quality = ("psnr_db", "dB")
+        if "qat" in res:
+            print(f"[autotune] qat({res['qat']['steps']} steps): "
+                  f"pre={res['qat']['psnr_pre']:.3f} dB -> "
+                  f"post={res['qat']['psnr_post']:.3f} dB (tuned plan)")
     else:
         if not args.arch:
             ap.error("--workload lm requires --arch")

@@ -16,8 +16,19 @@ import jax.numpy as jnp
 from repro.data import SyntheticLMStream
 from repro.launch import mesh as mesh_lib
 from repro.models import registry as reg
+from repro.nn import plan as plan_mod
 from repro.optim import adafactor, adamw, warmup_cosine
-from repro.train import TrainLoop, TrainLoopConfig
+from repro.train import QATPolicy, TrainLoop, TrainLoopConfig
+
+
+def parse_plan_arg(arg: str) -> plan_mod.SubstratePlan:
+    """CLI plan argument: a spec string, inline plan JSON, or a JSON path."""
+    arg = arg.strip()
+    if arg.startswith("{"):
+        return plan_mod.SubstratePlan.from_json(arg)
+    if arg.endswith(".json"):
+        return plan_mod.load_plan(arg)
+    return plan_mod.as_plan(arg)
 
 
 def add_reduced_overrides(ap: argparse.ArgumentParser):
@@ -29,16 +40,29 @@ def add_reduced_overrides(ap: argparse.ArgumentParser):
     ap.add_argument("--n-kv-heads", type=int, default=None)
     ap.add_argument("--n-experts", type=int, default=None)
     ap.add_argument("--dot-mode", default=None,
-                    choices=["exact", "int8", "approx_stat", "approx_bitexact",
-                             "approx_lut"])
+                    help="uniform substrate spec, e.g. 'exact', 'int8', or "
+                         "'approx_bitexact:proposed@6' (any registered "
+                         "backend:mult@width)")
+    ap.add_argument("--dot-plan", default=None,
+                    help="site-addressed substrate plan: a spec string, "
+                         "inline plan JSON, or path to a plan .json "
+                         "(e.g. an autotuner bundle's plan)")
 
 
 def overrides_from(args) -> dict:
     keys = {"n_layers": args.n_layers, "d_model": args.d_model,
             "d_ff": args.d_ff, "vocab": args.vocab, "n_heads": args.n_heads,
-            "n_kv_heads": args.n_kv_heads, "n_experts": args.n_experts,
-            "dot_mode": args.dot_mode}
-    return {k: v for k, v in keys.items() if v is not None}
+            "n_kv_heads": args.n_kv_heads, "n_experts": args.n_experts}
+    out = {k: v for k, v in keys.items() if v is not None}
+    # --dot-plan (site-addressed) wins over --dot-mode (uniform shorthand);
+    # both land in cfg.dot_plan so any registered arch trains on an
+    # approximate substrate without a dedicated config
+    if getattr(args, "dot_plan", None):
+        out["dot_plan"] = parse_plan_arg(args.dot_plan)
+    elif args.dot_mode:
+        out["dot_plan"] = plan_mod.SubstratePlan.uniform(
+            plan_mod._check_spec(args.dot_mode))
+    return out
 
 
 def main():
@@ -54,6 +78,19 @@ def main():
     ap.add_argument("--mesh", choices=["none", "debug", "pod", "multipod"],
                     default="none")
     ap.add_argument("--metrics-out", default="")
+    ap.add_argument("--qat", action="store_true",
+                    help="approximation-aware training: straight-through "
+                         "approximate forward on the configured plan")
+    ap.add_argument("--qat-forward", choices=["bitexact", "stat"],
+                    default="bitexact",
+                    help="QAT forward numerics (stat = fast separable "
+                         "error-moment model, same wiring+width)")
+    ap.add_argument("--qat-moment", action="store_true",
+                    help="add the error-moment slope correction to the "
+                         "straight-through backward")
+    ap.add_argument("--qat-out", default="",
+                    help="directory for a final plan+params bundle "
+                         "(checkpoint.save_plan_bundle)")
     add_reduced_overrides(ap)
     args = ap.parse_args()
 
@@ -61,11 +98,15 @@ def main():
     bundle = reg._BUILDERS[cfg.family](cfg)
     optimizer = adafactor() if cfg.n_experts else adamw()
 
+    qat_policy = (QATPolicy(forward=args.qat_forward,
+                            moment_correction=args.qat_moment)
+                  if args.qat else None)
     loop = TrainLoop(
         bundle.loss_fn, optimizer,
         TrainLoopConfig(total_steps=args.steps, ckpt_every=args.ckpt_every,
                         ckpt_dir=args.ckpt_dir, lr=args.lr,
-                        grad_accum=args.grad_accum),
+                        grad_accum=args.grad_accum,
+                        qat=qat_policy, plan=cfg.dot_plan),
         lr_schedule=warmup_cosine(args.lr, max(1, args.steps // 10), args.steps),
     )
     stream = SyntheticLMStream(vocab=cfg.vocab, batch=args.batch,
@@ -82,11 +123,24 @@ def main():
     def run():
         params, opt_state, start = loop.init_or_restore(
             lambda: bundle.init_params(jax.random.PRNGKey(0)))
-        print(f"[train] arch={args.arch} start_step={start} "
+        qat_tag = (f" qat={args.qat_forward}" if qat_policy else "")
+        plan_tag = (f" plan={loop.cfg.plan.label}"
+                    if loop.cfg.plan is not None else "")
+        print(f"[train] arch={args.arch} start_step={start}{plan_tag}{qat_tag} "
               f"params={sum(x.size for x in jax.tree_util.tree_leaves(params)):,}")
-        loop.run(params, opt_state, stream, start,
-                 on_step=lambda s, l: (s % 10 == 0) and print(
-                     f"  step {s:5d} loss {l:.4f}", flush=True))
+        params, _, _ = loop.run(
+            params, opt_state, stream, start,
+            on_step=lambda s, l: (s % 10 == 0) and print(
+                f"  step {s:5d} loss {l:.4f}", flush=True))
+        if args.qat_out:
+            from repro import checkpoint as ckpt_lib
+            plan = loop.cfg.plan or plan_mod.SubstratePlan.uniform("exact")
+            path = ckpt_lib.save_plan_bundle(
+                args.qat_out, plan, params,
+                extra={"arch": args.arch, "final_loss": loop.metrics.get(
+                    "losses", [None])[-1],
+                    "qat": qat_policy.describe() if qat_policy else None})
+            print(f"[train] wrote plan bundle: {path}")
 
     if mesh is not None:
         with mesh:

@@ -186,20 +186,28 @@ def dense(cfg: ModelConfig, x: Array, w: Array, b: Optional[Array] = None,
     """
     plan = substrate_plan(cfg)
     part = psub.current_partitioning()
+    override = psub.current_dot_override()
     d = splan.dispatch(plan, site)
     if d.index is None:
         spec_str, label = d.groups[0]
         cspec = psub.ContractionSpec.matmul(
             quant=_DENSE_QUANT, partitioning=part, site=label)
-        out = psub.get_substrate(spec_str).dot_general(x, w, cspec)
+        if override is not None:
+            out = override(spec_str, x, w, cspec)
+        else:
+            out = psub.get_substrate(spec_str).dot_general(x, w, cspec)
     else:
         branches = []
         for spec_str, label in d.groups:
             cspec = psub.ContractionSpec.matmul(
                 quant=_DENSE_QUANT, partitioning=part, site=label)
 
-            def branch(xx, ww, _s=psub.get_substrate(spec_str), _cs=cspec):
-                return _s.dot_general(xx, ww, _cs)
+            if override is not None:
+                def branch(xx, ww, _spec=spec_str, _cs=cspec, _ov=override):
+                    return _ov(_spec, xx, ww, _cs)
+            else:
+                def branch(xx, ww, _s=psub.get_substrate(spec_str), _cs=cspec):
+                    return _s.dot_general(xx, ww, _cs)
 
             branches.append(branch)
         sel = jnp.asarray(np.asarray(d.branch_of, np.int32))[d.index]

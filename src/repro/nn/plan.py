@@ -66,6 +66,7 @@ from repro.nn import substrate as psub
 
 __all__ = [
     "SubstratePlan", "as_plan", "load_plan", "save_plan",
+    "stat_spec", "stat_plan",
     "site_scope", "scan_site_scope", "current_sites", "dispatch",
     "SiteDispatch", "PLAN_SCHEMA_VERSION",
 ]
@@ -207,6 +208,31 @@ def load_plan(path: str) -> SubstratePlan:
         path = os.path.join(path, "plan.json")
     with open(path) as f:
         return SubstratePlan.from_dict(json.load(f))
+
+
+# backends with an approx_stat statistical counterpart (same wiring + width)
+_STAT_REWRITABLE = ("approx_bitexact", "approx_lut", "approx_pallas")
+
+
+def stat_spec(spec: str) -> str:
+    """A spec's fast statistical counterpart: same wiring/width, stat model.
+
+    Used wherever a cheap stand-in for a bit-exact wiring is wanted — the
+    autotuner's candidate scoring and the QAT ``forward="stat"`` training
+    path both rewrite through here. Specs without a stat counterpart
+    (``exact``, ``int8``, ``approx_stat`` itself) pass through unchanged.
+    """
+    parts = psub.parse_spec(spec)
+    if parts.backend in _STAT_REWRITABLE:
+        return f"approx_stat:{parts.mult_name}@{parts.width}"
+    return spec
+
+
+def stat_plan(plan: SubstratePlan) -> SubstratePlan:
+    """``plan`` with every assignment rewritten via :func:`stat_spec`."""
+    plan = as_plan(plan)
+    return SubstratePlan(default=stat_spec(plan.default),
+                         rules=tuple((p, stat_spec(s)) for p, s in plan.rules))
 
 
 # ---------------------------------------------------------------------------

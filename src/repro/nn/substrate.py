@@ -359,6 +359,39 @@ def partitioning_scope(p: Optional[Partitioning]):
         _PART_STATE.value = prev
 
 
+# -- ambient contraction override (the QAT layer's injection point) ---------
+
+_DOT_OVERRIDE_STATE = threading.local()
+
+
+def current_dot_override():
+    """The ambient contraction override installed by
+    :func:`dot_override_scope`, or None. Read at *trace* time by call sites
+    that route through the ambient plan (``models.common.dense``)."""
+    return getattr(_DOT_OVERRIDE_STATE, "value", None)
+
+
+@contextlib.contextmanager
+def dot_override_scope(fn):
+    """Install an ambient contraction override for the duration of the block.
+
+    ``fn(spec_str, x, w, cspec) -> Array`` replaces the default
+    ``get_substrate(spec_str).dot_general(x, w, cspec)`` at every consulting
+    call site. The hook exists so higher layers can change *how* a resolved
+    (site → spec) assignment contracts without the nn layer importing them —
+    ``repro.train.qat.qat_scope`` installs its straight-through-estimator
+    wrapper here, keeping forward values bit-identical to the substrate
+    while making the contraction differentiable. ``None`` is a no-op scope.
+    Thread-local, like :func:`partitioning_scope`.
+    """
+    prev = getattr(_DOT_OVERRIDE_STATE, "value", None)
+    _DOT_OVERRIDE_STATE.value = fn
+    try:
+        yield fn
+    finally:
+        _DOT_OVERRIDE_STATE.value = prev
+
+
 # ---------------------------------------------------------------------------
 # Dimension-number normalization + contraction planning
 # ---------------------------------------------------------------------------

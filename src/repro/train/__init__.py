@@ -1,2 +1,4 @@
-"""Training loop with fault tolerance."""
+"""Training loop with fault tolerance + approximation-aware training."""
 from repro.train.loop import TrainLoop, TrainLoopConfig  # noqa: F401
+from repro.train.qat import (  # noqa: F401
+    QATPolicy, qat_dot_general, qat_scope)

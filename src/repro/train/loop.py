@@ -16,6 +16,13 @@ Production invariants, scaled to whatever mesh is present:
   data-parallel axis (see ``dp_train_step_compressed``).
 * **grad accumulation** — microbatching for global batches that exceed
   memory.
+* **approximation-aware training** — set ``cfg.qat`` to a
+  :class:`repro.train.qat.QATPolicy` (optionally with ``cfg.plan``) and the
+  loss traces inside :func:`repro.train.qat.qat_scope`: every plan-resolved
+  contraction runs the approximate substrate forward with a
+  straight-through backward. The active plan + policy are recorded in each
+  checkpoint manifest and verified on restore, so a resumed QAT run cannot
+  silently continue under different numerics (see docs/training.md).
 """
 from __future__ import annotations
 
@@ -46,6 +53,8 @@ class TrainLoopConfig:
     fail_at_step: Optional[int] = None       # fault-injection hook
     straggler_factor: float = 3.0
     async_ckpt: bool = True
+    qat: Optional[Any] = None                # repro.train.qat.QATPolicy
+    plan: Optional[Any] = None               # SubstratePlan / spec / dict
 
 
 class TrainLoop:
@@ -54,15 +63,33 @@ class TrainLoop:
         self.loss_fn = loss_fn
         self.optimizer = optimizer
         self.cfg = cfg
+        if cfg.plan is not None:
+            from repro.nn import plan as _plan_mod
+            cfg.plan = _plan_mod.as_plan(cfg.plan)
         self.lr_schedule = lr_schedule or (lambda step: cfg.lr)
         self.ckpt = CheckpointManager(cfg.ckpt_dir, keep=cfg.keep)
         self.metrics: Dict[str, Any] = {"straggler_steps": 0, "resumed_from": None}
         self._step_fn = self._build_step()
 
+    def _ckpt_extra(self) -> Dict[str, Any]:
+        """Manifest record of the numerics this run trains under."""
+        extra: Dict[str, Any] = {}
+        if self.cfg.plan is not None:
+            extra["plan"] = self.cfg.plan.to_dict()
+        if self.cfg.qat is not None:
+            extra["qat"] = self.cfg.qat.describe()
+        return extra
+
     def _build_step(self):
         cfg = self.cfg
 
         def one_micro(params, batch):
+            if cfg.qat is not None:
+                # trace-time ambient: entering the scope inside the traced
+                # body installs the STE override for exactly this trace
+                from repro.train import qat as qat_mod
+                with qat_mod.qat_scope(cfg.qat):
+                    return jax.value_and_grad(self.loss_fn)(params, batch)
             return jax.value_and_grad(self.loss_fn)(params, batch)
 
         def step(params, opt_state, batch, lr):
@@ -101,12 +128,41 @@ class TrainLoop:
         start_step = 0
         latest = self.ckpt.latest_step()
         if latest is not None:
-            tree, step, _extra = self.ckpt.restore(
+            tree, step, extra = self.ckpt.restore(
                 {"params": params, "opt": opt_state}, shardings=shardings)
             params, opt_state = tree["params"], tree["opt"]
             start_step = step
             self.metrics["resumed_from"] = step
+            self._check_numerics(extra or {})
         return params, opt_state, start_step
+
+    def _check_numerics(self, extra: Dict[str, Any]):
+        """Refuse to resume under different numerics than the checkpoint's.
+
+        A QAT checkpoint is only meaningful together with the plan/policy it
+        trained under; an absent cfg.plan adopts the checkpoint's, a
+        conflicting one raises.
+        """
+        from repro.nn import plan as _plan_mod
+        saved_plan = extra.get("plan")
+        if saved_plan is not None:
+            saved = _plan_mod.as_plan(saved_plan)
+            if self.cfg.plan is None:
+                self.cfg.plan = saved
+            elif self.cfg.plan != saved:
+                raise ValueError(
+                    f"checkpoint was trained under plan {saved.label!r} "
+                    f"but this run configures {self.cfg.plan.label!r}; "
+                    "pass the matching --dot-plan (or none, to adopt the "
+                    "checkpoint's)")
+        saved_qat = extra.get("qat")
+        if saved_qat is not None:
+            from repro.train import qat as qat_mod
+            saved_pol = qat_mod.QATPolicy.from_dict(saved_qat)
+            if self.cfg.qat is not None and self.cfg.qat != saved_pol:
+                raise ValueError(
+                    f"checkpoint QAT policy {saved_qat} differs from this "
+                    f"run's {self.cfg.qat.describe()}")
 
     def run(self, params, opt_state, data_stream, start_step: int = 0,
             on_step: Optional[Callable] = None):
@@ -134,10 +190,11 @@ class TrainLoop:
                     on_step(step, loss)
                 if (step + 1) % cfg.ckpt_every == 0:
                     tree = {"params": params, "opt": opt_state}
+                    extra = self._ckpt_extra()
                     if cfg.async_ckpt:
-                        self.ckpt.save_async(step + 1, tree)
+                        self.ckpt.save_async(step + 1, tree, extra=extra)
                     else:
-                        self.ckpt.save(step + 1, tree)
+                        self.ckpt.save(step + 1, tree, extra=extra)
         finally:
             self.ckpt.wait()
         self.metrics["final_loss"] = losses[-1] if losses else None

@@ -1,0 +1,421 @@
+"""Approximation-aware training (QAT): differentiable approximate forward.
+
+The integer contraction paths of :mod:`repro.nn.substrate` are not usefully
+differentiable — ``jnp.round`` at the quantization boundary has zero
+gradient almost everywhere, so training a model whose ``dense()`` runs on an
+approximate substrate silently produces zero weight gradients. This module
+makes the approximate forward *trainable* via the standard straight-through
+estimator (STE — the canonical move in the approximate-multiplier-for-DNN
+literature, survey arxiv 2301.12181):
+
+* **forward** — exactly the substrate's own path: quantize → the wiring's
+  bit-exact / LUT / statistical integer product model → dequantize. Values
+  are bit-identical to inference on that substrate (and the ambient
+  :class:`~repro.obs.meter.ContractionMeter` sees the contraction the same
+  way — MAC/PDP attribution keeps working during training).
+* **backward** — the VJP of the *float* product ``x @ w`` under the same
+  dimension numbers, treating the whole quantize→approx→dequantize chain as
+  identity. Optionally, the separable error-moment model behind
+  ``approx_stat`` (the per-operand conditional means of
+  :func:`repro.core.lut.error_lut`, whose global aggregates are
+  :func:`repro.core.lut.error_moments`) contributes a first-order
+  correction: for the model ``f(a,b) ≈ a·b + r(a) + c(b) − µ``, the
+  backward adds ``r'(a)``/``c'(b)`` slope terms, so gradients see the
+  wiring's operand-dependent bias, not just the exact product.
+
+Composition with :class:`~repro.nn.plan.SubstratePlan` is ambient:
+:func:`qat_scope` installs the STE wrapper through
+:func:`repro.nn.substrate.dot_override_scope`, so every
+``models.common.dense`` call keeps resolving its site through the config's
+plan — per-site specs (e.g. ``conv.edge.center → proposed@6``) train under
+their *own* wiring's error. ``QATPolicy(forward="stat")`` rewrites each
+resolved spec to its MXU-friendly ``approx_stat`` counterpart for fast
+training epochs (validate on the bit-exact spec afterwards).
+
+The module also carries the trainable edge-detection workload (a float 3×3
+kernel + affine output calibration whose forward is the planned tap-group
+contraction of :func:`repro.nn.conv.edge_detect_planned`) and its
+:func:`finetune_edge` recovery loop — the paper-side half of
+``benchmarks/qat_recovery.py``. See docs/training.md.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lut as lut_lib
+from repro.nn import conv as conv_lib
+from repro.nn import plan as plan_mod
+from repro.nn import substrate as psub
+
+Array = jnp.ndarray
+
+_FORWARD_MODES = ("bitexact", "stat")
+
+
+@dataclasses.dataclass(frozen=True)
+class QATPolicy:
+    """How a resolved (site → spec) assignment contracts during training.
+
+    forward:            ``"bitexact"`` runs each resolved spec as-is (the
+                        deployment numerics); ``"stat"`` rewrites approx
+                        specs through :func:`repro.nn.plan.stat_spec` to the
+                        separable error-moment model — same wiring + width,
+                        MXU-friendly HLO — for cheap training epochs.
+    moment_correction:  add the separable error model's ``r'(a)``/``c'(b)``
+                        slope terms to the STE backward (see module
+                        docstring). Off by default: plain STE is the
+                        well-understood baseline.
+    """
+
+    forward: str = "bitexact"
+    moment_correction: bool = False
+
+    def __post_init__(self):
+        if self.forward not in _FORWARD_MODES:
+            raise ValueError(
+                f"QATPolicy.forward must be one of {_FORWARD_MODES}; "
+                f"got {self.forward!r}")
+
+    def forward_spec(self, spec_str: str) -> str:
+        """The spec the QAT forward actually runs for ``spec_str``."""
+        return (plan_mod.stat_spec(spec_str) if self.forward == "stat"
+                else spec_str)
+
+    def describe(self) -> Dict[str, Any]:
+        """JSON-serializable record (checkpoint manifests, bundles)."""
+        return {"forward": self.forward,
+                "moment_correction": self.moment_correction}
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "QATPolicy":
+        return cls(forward=d.get("forward", "bitexact"),
+                   moment_correction=bool(d.get("moment_correction", False)))
+
+
+# ---------------------------------------------------------------------------
+# the straight-through contraction
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _slope_tables(mult_key: str):
+    """Discrete slopes of the separable error model's r/c tables.
+
+    ``_stat_tables`` fits ``E[e(a,b)] ≈ r[a] + c[b] − µ`` on the exhaustive
+    error LUT (rows ordered by signed operand value, same convention as
+    :func:`repro.core.lut.error_lut`); central finite differences of r and c
+    are the first-order sensitivities of the expected error to each operand.
+    """
+    r, c, _mu = psub._stat_tables(mult_key)
+    return (np.gradient(r.astype(np.float64)).astype(np.float32),
+            np.gradient(c.astype(np.float64)).astype(np.float32))
+
+
+def _unplan3(t3: Array, shape, perm) -> Array:
+    """Invert ``_Plan.lhs3``/``rhs3``: (B,·,·) → the operand's own layout."""
+    inv = tuple(int(i) for i in np.argsort(perm))
+    return t3.reshape(tuple(shape[p] for p in perm)).transpose(inv)
+
+
+def _moment_terms(sub, cspec: psub.ContractionSpec, plan, x: Array, w: Array,
+                  g: Array):
+    """Error-moment STE correction terms (dx_corr, dw_corr).
+
+    With the separable model the output is
+    ``out_f[m,n] = sx·sw[n] · Σ_k (a·b + r(a) + c(b) − µ)`` where
+    ``a = x/sx``, ``b = w/sw``. Differentiating the r/c terms:
+    ``∂out_f/∂x[m,k] += sw[n]·r'(a[m,k])`` and
+    ``∂out_f/∂w[k,n] += sx[m]·c'(b[k,n])`` — the exact-product part is the
+    plain STE term. Quantization reuses the forward's own policy, so the
+    slopes are sampled at the operand codes the wiring actually saw.
+    """
+    q = cspec.quant
+    n = sub.meta.width
+    bits = q.bits if q.bits is not None else n
+    off = 1 << (n - 1)
+    qa, sa = psub._quantize_operand(plan.lhs3(x), q.x_mode, q.x_scale,
+                                    contract_axis=2, bits=bits, eps=q.eps)
+    qb, sb = psub._quantize_operand(plan.rhs3(w), q.w_mode, q.w_scale,
+                                    contract_axis=1, bits=bits, eps=q.eps)
+    rp, cp = _slope_tables(sub.meta.mult_key)
+    g3 = g.astype(jnp.float32).reshape(plan.b, plan.m, plan.n)
+    sa = jnp.asarray(sa, jnp.float32)
+    sb = jnp.asarray(sb, jnp.float32)
+    ai = (qa.astype(jnp.int32) + off) & ((1 << n) - 1)
+    bi = (qb.astype(jnp.int32) + off) & ((1 << n) - 1)
+    # Σ_n g[m,n]·sw[n] and Σ_m g[m,n]·sx[m] (scales broadcast: scalar or
+    # per-channel (B,1,N)/(B,M,1) from _quantize_operand)
+    gw = (g3 * sb).sum(axis=2, keepdims=True)            # (B, M, 1)
+    ga = (g3 * sa).sum(axis=1, keepdims=True)            # (B, 1, N)
+    dx3 = jnp.asarray(rp)[ai] * gw                       # (B, M, K)
+    dw3 = jnp.asarray(cp)[bi] * ga                       # (B, K, N)
+    return (_unplan3(dx3, x.shape, plan.lhs_perm),
+            _unplan3(dw3, w.shape, plan.rhs_perm))
+
+
+def _moment_correctable(sub, cspec: psub.ContractionSpec) -> bool:
+    return (cspec.quant is not None and sub.meta.mult_name != "exact"
+            and sub.meta.width <= lut_lib.MAX_LUT_BITS)
+
+
+def _build_ste(spec_str: str, cspec: psub.ContractionSpec, moment: bool):
+    sub = psub.get_substrate(spec_str)
+
+    @jax.custom_vjp
+    def ste(x, w):
+        return sub.dot_general(x, w, cspec)
+
+    def fwd(x, w):
+        return sub.dot_general(x, w, cspec), (x, w)
+
+    def bwd(res, g):
+        x, w = res
+        plan = psub._plan_contraction(x.shape, w.shape,
+                                      cspec.dimension_numbers)
+
+        def float_dot(xx, ww):
+            return jax.lax.dot_general(xx.astype(jnp.float32),
+                                       ww.astype(jnp.float32), plan.dims)
+
+        _, pullback = jax.vjp(float_dot, x, w)
+        dx, dw = pullback(g.astype(jnp.float32))
+        if moment and _moment_correctable(sub, cspec):
+            dxc, dwc = _moment_terms(sub, cspec, plan, x, w, g)
+            dx = dx + dxc.astype(dx.dtype)
+            dw = dw + dwc.astype(dw.dtype)
+        return dx, dw
+
+    ste.defvjp(fwd, bwd)
+    return ste
+
+
+@functools.lru_cache(maxsize=None)
+def _ste_fn_cached(spec_str, cspec, moment):
+    return _build_ste(spec_str, cspec, moment)
+
+
+def _ste_fn(spec_str: str, cspec: psub.ContractionSpec, moment: bool):
+    try:
+        return _ste_fn_cached(spec_str, cspec, moment)
+    except TypeError:  # unhashable spec (e.g. array-pinned quant scales)
+        return _build_ste(spec_str, cspec, moment)
+
+
+def qat_dot_general(x: Array, w: Array, spec_str: str,
+                    cspec: Optional[psub.ContractionSpec] = None,
+                    policy: Optional[QATPolicy] = None) -> Array:
+    """Differentiable contraction of float operands on an approximate spec.
+
+    Forward values are bit-identical to
+    ``get_substrate(policy.forward_spec(spec_str)).dot_general(x, w, cspec)``;
+    the backward is the straight-through estimator of the module docstring.
+    Exact-backend specs short-circuit to the substrate's native float path,
+    which is already differentiable (STE on it would be an identical
+    gradient at extra trace cost).
+    """
+    policy = policy if policy is not None else QATPolicy()
+    cspec = (cspec if cspec is not None
+             else psub.ContractionSpec.matmul(quant=psub.QuantPolicy()))
+    if cspec.quant is None:
+        raise ValueError(
+            "QAT contractions need a QuantPolicy (float operands); the "
+            "integer-domain dot_general has no float gradient to estimate")
+    fwd_spec = policy.forward_spec(spec_str)
+    sub = psub.get_substrate(fwd_spec)
+    if sub.meta.name == "exact":
+        return sub.dot_general(x, w, cspec)
+    return _ste_fn(fwd_spec, cspec, policy.moment_correction)(x, w)
+
+
+@contextlib.contextmanager
+def qat_scope(policy: Optional[QATPolicy] = None):
+    """Route every plan-resolved model contraction through the STE wrapper.
+
+    Installs :func:`qat_dot_general` as the ambient
+    :func:`repro.nn.substrate.dot_override_scope` hook, so
+    ``models.common.dense`` (and any other consulting call site) contracts
+    differentiably on whatever spec the config's
+    :class:`~repro.nn.plan.SubstratePlan` resolves per site — including the
+    ``lax.switch`` branches of mixed per-layer plans under ``lax.scan``.
+    Trace-time ambient (thread-local): wrap the *loss call* that is being
+    traced, as :class:`repro.train.loop.TrainLoop` does for its QAT steps.
+    """
+    policy = policy if policy is not None else QATPolicy()
+
+    def _override(spec_str, x, w, cspec):
+        return qat_dot_general(x, w, spec_str, cspec, policy)
+
+    with psub.dot_override_scope(_override):
+        yield policy
+
+
+# ---------------------------------------------------------------------------
+# trainable edge-detection workload (the paper's application, QAT-ified)
+# ---------------------------------------------------------------------------
+
+
+def init_edge_params() -> Dict[str, Array]:
+    """Float Laplacian kernel + affine output calibration (gain·resp + bias).
+
+    At init the forward reproduces :func:`repro.nn.conv.edge_detect_planned`
+    bit-for-bit (gain 1, bias 0, integer-valued kernel); training moves the
+    float master kernel through the round() STE and the calibration pair
+    absorbs the wiring's mean response error.
+    """
+    return {"kernel": jnp.asarray(conv_lib.LAPLACIAN, jnp.float32),
+            "gain": jnp.ones((), jnp.float32),
+            "bias": jnp.zeros((), jnp.float32)}
+
+
+#: pinned unit scales: pixels/coefficients are already integer-domain values,
+#: so quantization is a pure round() (identity on the integer init) and the
+#: dequantized response equals the integer tap-group response exactly.
+_EDGE_QUANT = psub.QuantPolicy(x_mode="per_tensor", w_mode="per_tensor",
+                               x_scale=1.0, w_scale=1.0)
+
+
+def edge_response(params: Dict[str, Array], imgs_u8: Array, plan,
+                  policy: Optional[QATPolicy] = None) -> Array:
+    """Differentiable planned edge response (float, 8-bit scale, unclipped).
+
+    Mirrors :func:`repro.nn.conv.edge_detect_planned`: per tap group the
+    pixels map into the resolved substrate's operand width and the group
+    contracts on that substrate (through :func:`qat_dot_general`, so
+    coefficient gradients flow); group responses rescale to the 8-bit range
+    and sum, then the affine calibration applies. Plan widths must be ≤ 8
+    (same contract as the planned integer path) and ≥ 5 so the Laplacian's
+    center tap stays inside the symmetric quantizer's clip range — the
+    integer path wraps where this path clips.
+    """
+    plan = plan_mod.as_plan(plan)
+    imgs = jnp.asarray(imgs_u8)
+    kernel = params["kernel"].reshape(-1)
+    total = None
+    for name, taps in conv_lib._EDGE_TAP_GROUPS:
+        site = f"{conv_lib.EDGE_SITE}.{name}"
+        spec_str = plan.resolve(site)
+        n = getattr(psub.get_substrate(spec_str).meta, "width", 8)
+        if not 5 <= n <= 8:
+            raise ValueError(
+                f"QAT edge plan widths must be in [5, 8]; site {site} "
+                f"resolved to {spec_str!r} (width {n})")
+        idx = np.asarray(taps, np.int32)
+        px = conv_lib.to_signed_pixels(imgs, n).astype(jnp.float32)
+        patches = conv_lib._im2col(px, 3, 3)[..., idx]
+        coeffs = kernel[idx].reshape(len(taps), 1)
+        cspec = psub.ContractionSpec(conv_lib._CONV_DIMS, quant=_EDGE_QUANT,
+                                     site=site)
+        raw = qat_dot_general(patches, coeffs, spec_str, cspec, policy)[..., 0]
+        r = raw * float(1 << (8 - n))
+        total = r if total is None else total + r
+    return params["gain"] * total + params["bias"]
+
+
+def edge_reference_response(imgs_u8: Array) -> Array:
+    """Exact float Laplacian response at the 8-bit scale (training target)."""
+    px = conv_lib.to_signed_pixels(imgs_u8, 8).astype(jnp.float32)
+    patches = conv_lib._im2col(px, 3, 3)
+    k = jnp.asarray(conv_lib.LAPLACIAN, jnp.float32).reshape(-1)
+    return (patches * k).sum(-1)
+
+
+def edge_maps(params: Dict[str, Array], imgs_u8: Array, plan,
+              policy: Optional[QATPolicy] = None) -> Array:
+    """uint8 edge maps of the QAT edge model (clip + round, PSNR-comparable)."""
+    resp = edge_response(params, imgs_u8, plan, policy)
+    return jnp.clip(jnp.round(resp), 0, 255).astype(jnp.uint8)
+
+
+def edge_psnr(params: Dict[str, Array], imgs_u8: Array, plan,
+              policy: Optional[QATPolicy] = None) -> float:
+    """PSNR (dB) of the QAT edge model against the exact-multiplier maps."""
+    ref = conv_lib.edge_detect_batched(imgs_u8, "exact")
+    return conv_lib.psnr(ref, edge_maps(params, imgs_u8, plan, policy))
+
+
+def calibrate_edge(params: Dict[str, Array], imgs_u8: Array, plan,
+                   policy: Optional[QATPolicy] = None) -> Dict[str, Array]:
+    """Closed-form affine calibration: least-squares (gain, bias) fit.
+
+    One forward pass; fits ``gain·resp + bias ≈ target`` on the unclipped
+    responses. Standard post-training calibration — QAT then refines the
+    kernel itself on top.
+    """
+    base = {**params, "gain": jnp.ones((), jnp.float32),
+            "bias": jnp.zeros((), jnp.float32)}
+    resp = edge_response(base, imgs_u8, plan, policy).reshape(-1)
+    target = edge_reference_response(imgs_u8).reshape(-1)
+    rm, tm = resp.mean(), target.mean()
+    var = jnp.maximum(((resp - rm) ** 2).mean(), 1e-6)
+    gain = ((resp - rm) * (target - tm)).mean() / var
+    bias = tm - gain * rm
+    return {**params, "gain": gain.astype(jnp.float32),
+            "bias": bias.astype(jnp.float32)}
+
+
+def finetune_edge(imgs_u8, plan, *, steps: int = 120, lr: float = 0.1,
+                  policy: Optional[QATPolicy] = None,
+                  params: Optional[Dict[str, Array]] = None,
+                  calibrate: bool = True) -> Dict[str, Any]:
+    """QAT fine-tune of the edge model under ``plan``'s wirings.
+
+    Loss is the MSE between the (unclipped) QAT response and the exact
+    float Laplacian response — clipping only applies at eval, so gradients
+    reach pixels the wiring's bias pushed out of range. Returns
+    ``{"params", "losses", "psnr_pre", "psnr_post"}`` where the PSNRs are
+    evaluated on the *bit-exact* forward regardless of ``policy.forward``.
+    """
+    from repro.optim import adamw
+
+    policy = policy if policy is not None else QATPolicy()
+    plan = plan_mod.as_plan(plan)
+    imgs = jnp.asarray(imgs_u8)
+    params = dict(params) if params is not None else init_edge_params()
+    eval_policy = QATPolicy(forward="bitexact")
+    psnr_pre = edge_psnr(init_edge_params(), imgs, plan, eval_policy)
+
+    target = edge_reference_response(imgs)
+
+    def loss_fn(p):
+        resp = edge_response(p, imgs, plan, policy)
+        return jnp.mean((resp - target) ** 2)
+
+    # seed "best" with the starting point so a short/unlucky run can never
+    # return params worse (by loss) than what it was given
+    best = (float(loss_fn(params)), params)
+    if calibrate:
+        params = calibrate_edge(params, imgs, plan, policy)
+        cal_loss = float(loss_fn(params))
+        if cal_loss < best[0]:
+            best = (cal_loss, params)
+    opt = adamw(weight_decay=0.0)
+    state = opt.init(params)
+
+    @jax.jit
+    def step(p, s):
+        loss, grads = jax.value_and_grad(loss_fn)(p)
+        p2, s2 = opt.update(grads, s, p, lr=jnp.float32(lr))
+        return loss, p2, s2
+
+    losses: List[float] = []
+    for _ in range(int(steps)):
+        prev = params
+        loss, params, state = step(prev, state)
+        losses.append(float(loss))   # loss at `prev`, pre-update
+        if losses[-1] < best[0]:
+            best = (losses[-1], prev)
+    if steps:
+        final = float(loss_fn(params))
+        if final < best[0]:
+            best = (final, params)
+    params = best[1]
+    psnr_post = edge_psnr(params, imgs, plan, eval_policy)
+    return {"params": params, "losses": losses,
+            "psnr_pre": float(psnr_pre), "psnr_post": float(psnr_post)}
