@@ -123,7 +123,10 @@ def main():
     def run():
         params, opt_state, start = loop.init_or_restore(
             lambda: bundle.init_params(jax.random.PRNGKey(0)))
-        qat_tag = (f" qat={args.qat_forward}" if qat_policy else "")
+        # read back from loop.cfg: restore may have adopted the checkpoint's
+        # plan/policy, and what the loop traces is what should be reported
+        qat_tag = (f" qat={loop.cfg.qat.forward}"
+                   if loop.cfg.qat is not None else "")
         plan_tag = (f" plan={loop.cfg.plan.label}"
                     if loop.cfg.plan is not None else "")
         print(f"[train] arch={args.arch} start_step={start}{plan_tag}{qat_tag} "
@@ -137,9 +140,10 @@ def main():
             plan = loop.cfg.plan or plan_mod.SubstratePlan.uniform("exact")
             path = ckpt_lib.save_plan_bundle(
                 args.qat_out, plan, params,
-                extra={"arch": args.arch, "final_loss": loop.metrics.get(
-                    "losses", [None])[-1],
-                    "qat": qat_policy.describe() if qat_policy else None})
+                extra={"arch": args.arch,
+                       "final_loss": loop.metrics.get("final_loss"),
+                       "qat": (loop.cfg.qat.describe()
+                               if loop.cfg.qat is not None else None)})
             print(f"[train] wrote plan bundle: {path}")
 
     if mesh is not None:
@@ -148,7 +152,9 @@ def main():
     else:
         run()
 
-    print(f"[train] done: final_loss={loop.metrics['final_loss']:.4f} "
+    fl = loop.metrics["final_loss"]
+    print(f"[train] done: "
+          f"final_loss={'n/a' if fl is None else format(fl, '.4f')} "
           f"stragglers={loop.metrics['straggler_steps']} "
           f"resumed_from={loop.metrics['resumed_from']}")
     if args.metrics_out:

@@ -142,15 +142,22 @@ _DENSE_QUANT = psub.QuantPolicy()
 
 
 def substrate_plan(cfg: ModelConfig) -> "splan.SubstratePlan":
-    """The config's :class:`~repro.nn.plan.SubstratePlan`.
+    """The plan governing this trace: ambient override, else the config's.
 
-    ``cfg.dot_plan`` wins when set (a plan, spec string, or plan dict —
-    normalized through :func:`repro.nn.plan.as_plan`); otherwise the legacy
-    ``cfg.dot_mode`` spec auto-wraps into a uniform single-rule plan. The
-    legacy path emits a DeprecationWarning for non-default specs — set
+    An active :func:`repro.nn.plan.plan_override_scope` wins outright — it
+    is how a layer above an already-built model function (the train loop
+    resuming under a checkpoint's recorded plan) changes the numerics of
+    the whole trace. Otherwise ``cfg.dot_plan`` wins when set (a plan, spec
+    string, or plan dict — normalized through
+    :func:`repro.nn.plan.as_plan`); otherwise the legacy ``cfg.dot_mode``
+    spec auto-wraps into a uniform single-rule plan. The legacy path emits
+    a DeprecationWarning for non-default specs — set
     ``dot_plan=SubstratePlan.uniform(spec)`` (or just ``dot_plan=spec``)
     instead.
     """
+    override = splan.current_plan_override()
+    if override is not None:
+        return override
     if cfg.dot_plan is not None:
         return splan.as_plan(cfg.dot_plan)
     if cfg.dot_mode != "exact":

@@ -68,6 +68,7 @@ __all__ = [
     "SubstratePlan", "as_plan", "load_plan", "save_plan",
     "stat_spec", "stat_plan",
     "site_scope", "scan_site_scope", "current_sites", "dispatch",
+    "plan_override_scope", "current_plan_override",
     "SiteDispatch", "PLAN_SCHEMA_VERSION",
 ]
 
@@ -258,6 +259,45 @@ def _resolve(plan: SubstratePlan, site: str) -> str:
         if best_score is None or score >= best_score:  # later rule wins ties
             best_spec, best_score = spec, score
     return plan.default if best_spec is None else best_spec
+
+
+# ---------------------------------------------------------------------------
+# ambient plan override (thread-local, mirrors partitioning_scope)
+# ---------------------------------------------------------------------------
+
+
+_PLAN_OVERRIDE_STATE = threading.local()
+
+
+def current_plan_override() -> Optional[SubstratePlan]:
+    """The ambient plan installed by :func:`plan_override_scope`, or None.
+
+    Read at *trace* time by call sites that resolve their substrate from a
+    config-carried plan (:func:`repro.models.common.substrate_plan`).
+    """
+    return getattr(_PLAN_OVERRIDE_STATE, "value", None)
+
+
+@contextlib.contextmanager
+def plan_override_scope(plan: "SubstratePlan | str | dict | None"):
+    """Make ``plan`` govern every plan-consulting contraction in the block.
+
+    While active, :func:`repro.models.common.substrate_plan` returns this
+    plan instead of the model config's ``dot_plan``/``dot_mode`` — the hook
+    by which a layer *above* an already-built model function (e.g. a
+    :class:`repro.train.loop.TrainLoop` resuming from a checkpoint whose
+    manifest pins different numerics) can change which substrate each site
+    resolves to without rebuilding the model. Trace-time ambient: wrap the
+    call being traced, exactly like
+    :func:`repro.nn.substrate.dot_override_scope`. ``None`` is a no-op
+    scope.
+    """
+    prev = getattr(_PLAN_OVERRIDE_STATE, "value", None)
+    _PLAN_OVERRIDE_STATE.value = as_plan(plan) if plan is not None else None
+    try:
+        yield _PLAN_OVERRIDE_STATE.value
+    finally:
+        _PLAN_OVERRIDE_STATE.value = prev
 
 
 # ---------------------------------------------------------------------------

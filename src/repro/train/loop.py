@@ -20,12 +20,20 @@ Production invariants, scaled to whatever mesh is present:
   :class:`repro.train.qat.QATPolicy` (optionally with ``cfg.plan``) and the
   loss traces inside :func:`repro.train.qat.qat_scope`: every plan-resolved
   contraction runs the approximate substrate forward with a
-  straight-through backward. The active plan + policy are recorded in each
-  checkpoint manifest and verified on restore, so a resumed QAT run cannot
-  silently continue under different numerics (see docs/training.md).
+  straight-through backward. A non-None ``cfg.plan`` *governs* the trace —
+  the loss is traced inside
+  :func:`repro.nn.plan.plan_override_scope(cfg.plan)`, so every
+  plan-consulting contraction resolves through it regardless of what the
+  model function was built with. The active plan + policy are recorded in
+  each checkpoint manifest and re-applied on restore: an unset
+  ``cfg.plan``/``cfg.qat`` adopts the checkpoint's (effectively — the
+  adopted plan is installed in the trace, not just logged), a conflicting
+  one raises. A resumed QAT run therefore cannot silently continue under
+  different numerics (see docs/training.md).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from functools import partial
@@ -84,13 +92,19 @@ class TrainLoop:
         cfg = self.cfg
 
         def one_micro(params, batch):
-            if cfg.qat is not None:
-                # trace-time ambient: entering the scope inside the traced
-                # body installs the STE override for exactly this trace
-                from repro.train import qat as qat_mod
-                with qat_mod.qat_scope(cfg.qat):
-                    return jax.value_and_grad(self.loss_fn)(params, batch)
-            return jax.value_and_grad(self.loss_fn)(params, batch)
+            # trace-time ambients: entering the scopes inside the traced
+            # body installs the plan + STE overrides for exactly this trace,
+            # so cfg.plan/cfg.qat (including checkpoint-adopted values) are
+            # what the contraction actually runs, not just what is logged
+            with contextlib.ExitStack() as scopes:
+                if cfg.plan is not None:
+                    from repro.nn import plan as _plan_mod
+                    scopes.enter_context(
+                        _plan_mod.plan_override_scope(cfg.plan))
+                if cfg.qat is not None:
+                    from repro.train import qat as qat_mod
+                    scopes.enter_context(qat_mod.qat_scope(cfg.qat))
+                return jax.value_and_grad(self.loss_fn)(params, batch)
 
         def step(params, opt_state, batch, lr):
             if cfg.grad_accum == 1:
@@ -140,15 +154,23 @@ class TrainLoop:
         """Refuse to resume under different numerics than the checkpoint's.
 
         A QAT checkpoint is only meaningful together with the plan/policy it
-        trained under; an absent cfg.plan adopts the checkpoint's, a
-        conflicting one raises.
+        trained under; an absent ``cfg.plan``/``cfg.qat`` adopts the
+        checkpoint's, a conflicting one raises. Adoption is *effective*, not
+        cosmetic: the adopted plan/policy land in ``cfg`` before the step
+        function has traced, and the step traces the loss inside
+        ``plan_override_scope(cfg.plan)`` / ``qat_scope(cfg.qat)`` — so the
+        resumed contractions run the checkpoint's numerics even though the
+        model function was built earlier. The step function is rebuilt on
+        adoption so no previously traced program can be reused.
         """
         from repro.nn import plan as _plan_mod
+        adopted = False
         saved_plan = extra.get("plan")
         if saved_plan is not None:
             saved = _plan_mod.as_plan(saved_plan)
             if self.cfg.plan is None:
                 self.cfg.plan = saved
+                adopted = True
             elif self.cfg.plan != saved:
                 raise ValueError(
                     f"checkpoint was trained under plan {saved.label!r} "
@@ -159,10 +181,19 @@ class TrainLoop:
         if saved_qat is not None:
             from repro.train import qat as qat_mod
             saved_pol = qat_mod.QATPolicy.from_dict(saved_qat)
-            if self.cfg.qat is not None and self.cfg.qat != saved_pol:
+            if self.cfg.qat is None:
+                # an approximate-plan resume without the checkpoint's STE
+                # policy would run the integer forward un-wrapped: jnp.round
+                # has zero gradient a.e. — silent training breakage, not a
+                # numerics preference. Adopt, symmetric with the plan above.
+                self.cfg.qat = saved_pol
+                adopted = True
+            elif self.cfg.qat != saved_pol:
                 raise ValueError(
                     f"checkpoint QAT policy {saved_qat} differs from this "
                     f"run's {self.cfg.qat.describe()}")
+        if adopted:
+            self._step_fn = self._build_step()
 
     def run(self, params, opt_state, data_stream, start_step: int = 0,
             on_step: Optional[Callable] = None):

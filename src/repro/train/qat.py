@@ -379,7 +379,10 @@ def finetune_edge(imgs_u8, plan, *, steps: int = 120, lr: float = 0.1,
     imgs = jnp.asarray(imgs_u8)
     params = dict(params) if params is not None else init_edge_params()
     eval_policy = QATPolicy(forward="bitexact")
-    psnr_pre = edge_psnr(init_edge_params(), imgs, plan, eval_policy)
+    # pre-PSNR of the *starting point* — a caller's warm-start params (e.g.
+    # the autotuner's adapted params riding through repeated calls), not a
+    # fresh init
+    psnr_pre = edge_psnr(params, imgs, plan, eval_policy)
 
     target = edge_reference_response(imgs)
 

@@ -162,6 +162,26 @@ def _tiny_cfg(**kw):
                           vocab=64, n_heads=2, n_kv_heads=2, **kw)
 
 
+def test_plan_override_scope_governs_dense_numerics():
+    """The ambient plan override changes what dense() actually contracts.
+
+    This is the mechanism behind checkpoint plan adoption: the train loop
+    cannot rebuild an already-built loss_fn, so the adopted plan must win
+    over the model config's at trace time.
+    """
+    cfg = _tiny_cfg()  # no dot_plan → exact numerics
+    plan = splan.SubstratePlan.uniform("approx_bitexact:proposed@6")
+    x = jnp.asarray(RNG.normal(size=(2, 8, 32)), jnp.float32)
+    w = jnp.asarray(RNG.normal(size=(32, 32)), jnp.float32)
+    exact = cm.dense(cfg, x, w, site="proj")
+    with splan.plan_override_scope(plan):
+        overridden = cm.dense(cfg, x, w, site="proj")
+    assert splan.current_plan_override() is None  # scope restored
+    planned = cm.dense(_tiny_cfg(dot_plan=plan), x, w, site="proj")
+    np.testing.assert_array_equal(np.asarray(overridden), np.asarray(planned))
+    assert float(jnp.abs(overridden - exact).max()) > 0
+
+
 def test_qat_scope_forward_values_match_unscoped_dense():
     """The scope changes gradients, never values (STE fwd = substrate fwd)."""
     mixed = splan.SubstratePlan(default="approx_bitexact:proposed@8", rules=(
@@ -356,17 +376,53 @@ def test_restore_adopts_plan_and_rejects_mismatch(tmp_path):
     params, opt, start = loop.init_or_restore(init)
     loop.run(params, opt, stream, start)
 
-    # cfg.plan=None adopts the checkpoint's plan
+    # cfg.plan=None / cfg.qat=None adopt the checkpoint's plan AND policy
+    # (a plan without the STE policy would train with zero grads through
+    # the round() boundary)
     loop2, _, init2 = _qat_loop(tmp_path, total_steps=4, plan=None,
                                 qat_policy=None)
     loop2.init_or_restore(init2)
     assert loop2.cfg.plan == _PLAN
+    assert loop2.cfg.qat == QATPolicy(forward="stat")
 
     # a conflicting plan refuses to resume
     other = splan.SubstratePlan.uniform("approx_bitexact:proposed@6")
     loop3, _, init3 = _qat_loop(tmp_path, total_steps=4, plan=other)
     with pytest.raises(ValueError, match="plan"):
         loop3.init_or_restore(init3)
+
+
+def test_adopted_plan_governs_resumed_contractions(tmp_path):
+    """Adoption is effective, not cosmetic: a plan-less/policy-less resume
+    continues *bitwise* identically to a resume that configures the
+    checkpoint's plan + policy explicitly. The model bundle of the adopting
+    run is built WITHOUT a dot_plan, so only the loop's trace-time override
+    can be supplying the approximate numerics (and only the adopted STE
+    policy can be supplying nonzero gradients through the quant boundary —
+    bitwise-equal trained params prove both took effect)."""
+    import shutil
+
+    seed_loop, stream, init = _qat_loop(tmp_path / "a", total_steps=4)
+    params, opt, start = seed_loop.init_or_restore(init)
+    seed_loop.run(params, opt, stream, start)
+    shutil.copytree(tmp_path / "a", tmp_path / "b")
+
+    # explicit continuation: plan + policy passed in, as at seed time
+    loop_e, stream_e, init_e = _qat_loop(tmp_path / "a", total_steps=8)
+    pe, oe, se = loop_e.init_or_restore(init_e)
+    pe, _, _ = loop_e.run(pe, oe, stream_e, se)
+
+    # adopting continuation: nothing configured, everything from the manifest
+    loop_a, stream_a, init_a = _qat_loop(tmp_path / "b", total_steps=8,
+                                         plan=None, qat_policy=None)
+    pa, oa, sa = loop_a.init_or_restore(init_a)
+    assert sa == 4 and loop_a.cfg.plan == _PLAN
+    pa, _, _ = loop_a.run(pa, oa, stream_a, sa)
+
+    for a, b in zip(jax.tree_util.tree_leaves(pe),
+                    jax.tree_util.tree_leaves(pa)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
 
 
 def test_parse_plan_arg_cli_forms(tmp_path):
